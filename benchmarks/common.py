@@ -1,0 +1,61 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+from repro.core import RaftParams, ReadMode, SimParams, run_workload
+
+# The six consistency configurations of Figs. 7/9.
+CONFIGS = {
+    "inconsistent": dict(read_mode=ReadMode.INCONSISTENT),
+    "quorum": dict(read_mode=ReadMode.QUORUM),
+    "ongaro_lease": dict(read_mode=ReadMode.ONGARO_LEASE),
+    "log_lease": dict(read_mode=ReadMode.LEASEGUARD,
+                      defer_commit_writes=False, inherited_lease_reads=False),
+    "defer_commit": dict(read_mode=ReadMode.LEASEGUARD,
+                         defer_commit_writes=True, inherited_lease_reads=False),
+    "leaseguard": dict(read_mode=ReadMode.LEASEGUARD,
+                       defer_commit_writes=True, inherited_lease_reads=True),
+}
+
+
+def crash_leader_at(t: float):
+    def script(cluster):
+        def crash():
+            ldr = cluster.leader()
+            if ldr is not None and ldr.alive:
+                ldr.crash()
+        cluster.loop.call_later(t, crash)
+    return script
+
+
+def freeze_then_crash_at(t_freeze: float, t_crash: float):
+    """Engineer a limbo region (paper §6.6): the leader keeps committing but
+    stops advertising commitIndex, then crashes."""
+    def script(cluster):
+        def freeze():
+            ldr = cluster.leader()
+            if ldr is not None and ldr.alive:
+                ldr.freeze_commits()
+
+        def crash():
+            ldr = cluster.leader()
+            if ldr is not None and ldr.alive:
+                ldr.crash()
+        cluster.loop.call_later(t_freeze, freeze)
+        cluster.loop.call_later(t_crash, crash)
+    return script
+
+
+def emit(rows: list[dict]) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

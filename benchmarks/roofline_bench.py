@@ -1,0 +1,79 @@
+"""Roofline benchmark: renders the §Roofline table from the dry-run JSON
+rows (experiments/dryrun/*.json). With --compile (or when rows are
+missing) it compiles the cells itself — slow on CPU; normally
+``python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun``
+produces the rows first."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROWS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+
+
+def load_rows(rows_dir: str = ROWS_DIR) -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(rows_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = load_rows()
+    out = []
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "status": "skipped",
+                        "compute_ms": "", "memory_ms": "",
+                        "collective_ms": "", "dominant": "",
+                        "roofline_pct": "", "hbm_gib_per_dev": ""})
+            continue
+        if r.get("status") != "ok":
+            continue
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "roofline_pct": round(100 * r["roofline_fraction"], 2),
+            "hbm_gib_per_dev": round(
+                (r["arg_bytes"] + r["temp_bytes"]) / 2**30, 2),
+        })
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | useful-FLOPs | roofline | "
+           "args+temp GiB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(load_rows(), key=lambda r: (r["arch"], r["shape"],
+                                                r["mesh"])):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— skipped: sub-quadratic attention required — "
+                         f"| | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {100*r['roofline_fraction']:.2f}% "
+            f"| {(r['arg_bytes']+r['temp_bytes'])/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7]
+
+Prints one CSV block per figure, plus a final ``name,us_per_call,derived``
+summary line per benchmark for harness compatibility.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig5_lease_duration, fig6_latency, fig7_availability,
+               fig8_skewness, fig11_scalability)
+from .common import emit
+
+FIGS = {
+    "fig5_lease_duration": fig5_lease_duration.run,
+    "fig6_latency": fig6_latency.run,
+    "fig7_availability": fig7_availability.run,
+    "fig7_headline": fig7_availability.summarize_post_election_reads,
+    "fig8_skewness": fig8_skewness.run,
+    "fig11_scalability": fig11_scalability.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--roofline", action="store_true",
+                    help="also run the data-plane roofline benchmark "
+                         "(slow: compiles dry-run cells)")
+    args = ap.parse_args()
+
+    summary = []
+    for name, fn in FIGS.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n== {name} ==", flush=True)
+        t0 = time.time()
+        rows = fn(quick=args.quick)
+        dt = time.time() - t0
+        emit(rows)
+        summary.append((name, dt * 1e6 / max(1, len(rows)), len(rows)))
+
+    if args.roofline:
+        from . import roofline_bench
+        print("\n== roofline ==", flush=True)
+        t0 = time.time()
+        rows = roofline_bench.run(quick=args.quick)
+        dt = time.time() - t0
+        emit(rows)
+        summary.append(("roofline", dt * 1e6 / max(1, len(rows)), len(rows)))
+
+    print("\nname,us_per_call,derived")
+    for name, us, n in summary:
+        print(f"{name},{us:.1f},rows={n}")
+
+
+if __name__ == "__main__":
+    main()

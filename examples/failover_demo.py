@@ -1,0 +1,69 @@
+"""Failover availability timeline (paper Fig. 7 as a terminal demo).
+
+Runs the same crash scenario under four consistency configurations and
+prints per-100ms read/write throughput, making the paper's two
+availability optimizations visible, then demonstrates elastic scaling.
+
+Run:  PYTHONPATH=src python examples/failover_demo.py
+"""
+
+from repro.core import RaftParams, ReadMode, SimParams, run_workload, \
+    throughput_timeline
+
+CONFIGS = {
+    "quorum": dict(read_mode=ReadMode.QUORUM),
+    "log_lease (no opts)": dict(read_mode=ReadMode.LEASEGUARD,
+                                defer_commit_writes=False,
+                                inherited_lease_reads=False),
+    "defer_commit": dict(read_mode=ReadMode.LEASEGUARD,
+                         defer_commit_writes=True,
+                         inherited_lease_reads=False),
+    "LeaseGuard (full)": dict(read_mode=ReadMode.LEASEGUARD),
+}
+
+
+def crash_at(t):
+    def script(cluster):
+        cluster.loop.call_later(
+            t, lambda: cluster.leader() and cluster.leader().crash())
+    return script
+
+
+def main() -> None:
+    print("leader crashes at t=0.5s; ET=0.5s; lease Δ=1.0s "
+          "(old lease expires ~t=1.5s)\n")
+    for name, flags in CONFIGS.items():
+        raft = RaftParams(election_timeout=0.5, election_jitter=0.1,
+                          heartbeat_interval=0.05, lease_duration=1.0,
+                          **flags)
+        sim = SimParams(seed=7, sim_duration=2.2, interarrival=500e-6,
+                        write_fraction=1 / 3)
+        res = run_workload(raft, sim, fault_script=crash_at(0.5),
+                           check=True, settle_time=1.0)
+        t0 = min(op.start_ts for op in res.history)
+        bins = throughput_timeline(res.history, 0.1, t0, t0 + 2.2)
+        reads = "".join("#" if b["reads"] > 100 else
+                        ("+" if b["reads"] > 0 else ".") for b in bins)
+        writes = "".join("#" if b["writes"] > 40 else
+                         ("+" if b["writes"] > 0 else ".") for b in bins)
+        print(f"{name:22s} reads  [{reads}]")
+        print(f"{'':22s} writes [{writes}]   "
+              f"({res.reads_ok}r/{res.writes_ok}w ok, linearizable: "
+              f"{res.linearizable_ops} ops checked)")
+    print("\nlegend: '#' full throughput, '+' partial, '.' unavailable; "
+          "each cell = 100 ms")
+    print("note LeaseGuard's read row never goes dark after the election "
+          "(inherited leases), and defer_commit's write burst at ~1.5s.")
+
+    # elastic scaling bonus: grow the coordinator under load
+    from repro.coord.kvstore import LocalCoordinator
+    coord = LocalCoordinator()
+    coord.append("cfg", {"v": 1})
+    nid = coord.scale_up()
+    print(f"\nelastic scaling: replica set grew to "
+          f"{sorted(coord._leader().config)} (added node {nid}); "
+          f"reads still zero-roundtrip: {coord.read_latest('cfg')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Batched serving with leased metadata reads.
+
+Starts a coordinator, commits a model manifest (as training would), then
+serves batched generation requests. The engine discovers "which model
+version to serve" with a LeaseGuard zero-roundtrip read — the poll every
+serving replica does continuously in production.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.coord.registry import ClusterRegistry
+from repro.launch.train import PRESETS
+from repro.models import init_params
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    cfg = PRESETS["tiny"]
+    registry = ClusterRegistry()
+    registry.commit_checkpoint({"step": 1234, "path": "(in-memory demo)",
+                                "sha256": "f" * 64, "n_arrays": 0,
+                                "extra": {"arch": cfg.name}})
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params, ServeConfig(max_new_tokens=12),
+                    registry=registry)
+    print(f"serving model version: step {engine.model_version['step']} "
+          f"(read with zero network roundtrips: "
+          f"{registry.coord.stats()['read_messages']} messages for "
+          f"{registry.coord.stats()['reads']} reads)")
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                 cfg.vocab_size)
+    out = engine.generate(prompts)
+    print(f"generated batch: shape {out.shape}")
+    for i, row in enumerate(out):
+        print(f"  request {i}: {row.tolist()}")
+
+    # failover drill: coordinator leader dies; the next version poll
+    # still succeeds (inherited lease on the new leader)
+    registry.coord.crash_leader()
+    v = registry.latest_checkpoint()
+    print(f"after coordinator failover, version poll still serves: "
+          f"step {v['step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""In-process coordination service: a LeaseGuard Raft replica set driven
+by a crank adapter.
+
+The deterministic simulator (repro.core) models time explicitly; the
+trainer lives in wall-clock time. The adapter bridges them: each client
+call cranks the simulated event loop forward until the operation's future
+resolves (or a simulated timeout passes). One simulated replica set =
+one coordination service; fault injection (crash_leader, partition) is
+exposed for tests, examples, and failover drills.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Optional
+
+from ..core import (Cluster, RaftParams, ReadMode, SimParams, build_cluster)
+
+
+class CoordinatorError(RuntimeError):
+    pass
+
+
+class LocalCoordinator:
+    """Replicated, linearizable KV (append-only lists per key) with
+    LeaseGuard zero-roundtrip reads."""
+
+    def __init__(self, n_nodes: int = 3, seed: int = 0,
+                 read_mode: ReadMode = ReadMode.LEASEGUARD,
+                 lease_duration: float = 1.0) -> None:
+        raft = RaftParams(n_nodes=n_nodes, read_mode=read_mode,
+                          election_timeout=0.5, heartbeat_interval=0.05,
+                          lease_duration=lease_duration)
+        sim = SimParams(seed=seed)
+        self.cluster: Cluster = build_cluster(raft, sim)
+        self.cluster.wait_for_leader()
+        self.reads = 0
+        self.read_messages = 0
+
+    # -- crank ----------------------------------------------------------
+    def _run(self, coro, max_sim_time: float = 30.0):
+        loop = self.cluster.loop
+        task = loop.create_task(coro)
+        deadline = loop.now + max_sim_time
+        while not task.done() and loop.now < deadline:
+            loop.run_until(loop.now + 0.01)
+        if not task.done():
+            raise CoordinatorError("coordinator operation timed out")
+        return task.result()
+
+    def _leader(self):
+        ldr = self.cluster.leader()
+        if ldr is None or not ldr.alive:
+            # crank until a leader exists (failover in progress)
+            self.cluster.wait_for_leader()
+            ldr = self.cluster.leader()
+        if ldr is None:
+            raise CoordinatorError("no leader")
+        return ldr
+
+    # -- public KV API ----------------------------------------------------
+    def append(self, key: str, value: Any, retries: int = 5) -> None:
+        """Linearizable durable write (committed through the Raft log)."""
+        payload = json.dumps(value)
+        for _ in range(retries):
+            ldr = self._leader()
+            res = self._run(ldr.client_write(key, payload))
+            if res.ok:
+                return
+            # not_leader / no_lease / timeout: crank forward and retry
+            self.cluster.loop.run_until(self.cluster.loop.now + 0.3)
+        raise CoordinatorError(f"write failed after {retries} retries")
+
+    def read_list(self, key: str, retries: int = 5) -> list:
+        """Linearizable read — zero network roundtrips under LeaseGuard."""
+        for _ in range(retries):
+            ldr = self._leader()
+            before = self.cluster.net.messages_sent
+            res = self._run(ldr.client_read(key))
+            if res.ok:
+                self.reads += 1
+                self.read_messages += self.cluster.net.messages_sent - before
+                return [json.loads(v) for v in res.value]
+            self.cluster.loop.run_until(self.cluster.loop.now + 0.3)
+        raise CoordinatorError(f"read failed after {retries} retries")
+
+    def read_latest(self, key: str) -> Optional[Any]:
+        xs = self.read_list(key)
+        return xs[-1] if xs else None
+
+    # -- elastic scaling (paper §4.4 single-node reconfiguration) ---------
+    def scale_up(self) -> int:
+        """Add one fresh replica to the coordinator set."""
+        new_id = max(self.cluster.nodes) + 1
+        ldr = self._leader()
+        self.cluster.spawn_node(new_id, ldr.p)
+        res = self._run(ldr.change_membership(set(ldr.config) | {new_id}))
+        if not res.ok:
+            raise CoordinatorError(f"scale_up failed: {res.error}")
+        return new_id
+
+    def scale_down(self, node_id: int) -> None:
+        ldr = self._leader()
+        if node_id == ldr.id:
+            raise CoordinatorError("cannot remove the leader")
+        res = self._run(ldr.change_membership(set(ldr.config) - {node_id}))
+        if not res.ok:
+            raise CoordinatorError(f"scale_down failed: {res.error}")
+
+    # -- fault injection ---------------------------------------------------
+    def crash_leader(self) -> int:
+        ldr = self._leader()
+        ldr.crash()
+        return ldr.id
+
+    def restart_node(self, node_id: int) -> None:
+        self.cluster.nodes[node_id].restart()
+
+    def relinquish_leadership(self) -> None:
+        """Planned handover (paper §5.1 end-lease)."""
+        ldr = self._leader()
+        ldr.relinquish_lease()
+        self.cluster.loop.run_until(self.cluster.loop.now + 0.2)
+        ldr.crash()
+
+    def stats(self) -> dict:
+        return {
+            "reads": self.reads,
+            "read_messages": self.read_messages,
+            "messages_total": self.cluster.net.messages_sent,
+            "leader": self.cluster.directory.leader_id,
+            "term": self.cluster.directory.leader_term,
+        }

@@ -1,0 +1,72 @@
+"""Training-cluster metadata on top of the LeaseGuard coordinator.
+
+Three tables, all backed by the replicated linearizable KV:
+
+* **checkpoint registry** — a checkpoint exists once its manifest is
+  committed through the Raft log; ``latest_checkpoint()`` is the
+  paper's zero-roundtrip leased read (on a 1000-node fleet every worker
+  polls this every step — with quorum reads that poll would be the
+  coordinator's bottleneck; with LeaseGuard it is free);
+* **membership** — workers register and heartbeat; elastic scaling reads
+  the live set to decide the mesh;
+* **straggler table** — per-worker step-time reports; the launcher flags
+  workers slower than ``threshold ×`` the fleet median.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import Any, Optional
+
+from .kvstore import LocalCoordinator
+
+CKPT_KEY = "ckpt/manifest"
+
+
+class ClusterRegistry:
+    def __init__(self, coord: Optional[LocalCoordinator] = None) -> None:
+        self.coord = coord or LocalCoordinator()
+
+    # -- checkpoints -------------------------------------------------------
+    def commit_checkpoint(self, manifest: dict) -> bool:
+        self.coord.append(CKPT_KEY, manifest)
+        return True
+
+    def latest_checkpoint(self) -> Optional[dict]:
+        return self.coord.read_latest(CKPT_KEY)
+
+    def checkpoint_history(self) -> list[dict]:
+        return self.coord.read_list(CKPT_KEY)
+
+    # -- membership --------------------------------------------------------
+    def register_worker(self, worker_id: str, meta: Optional[dict] = None) -> None:
+        self.coord.append("members/joined", {"id": worker_id,
+                                             "meta": meta or {}})
+
+    def deregister_worker(self, worker_id: str) -> None:
+        self.coord.append("members/left", {"id": worker_id})
+
+    def live_workers(self) -> set[str]:
+        joined = {r["id"] for r in self.coord.read_list("members/joined")}
+        left = {r["id"] for r in self.coord.read_list("members/left")}
+        return joined - left
+
+    # -- stragglers ---------------------------------------------------------
+    def report_step_time(self, worker_id: str, step: int,
+                         seconds: float) -> None:
+        self.coord.append("stragglers/reports",
+                          {"id": worker_id, "step": step, "s": seconds})
+
+    def straggler_flags(self, threshold: float = 1.5,
+                        window: int = 64) -> dict[str, bool]:
+        """Workers whose recent mean step time exceeds threshold× the
+        fleet median. Zero-roundtrip read: callable every step."""
+        reports = self.coord.read_list("stragglers/reports")[-window:]
+        if not reports:
+            return {}
+        per: dict[str, list[float]] = {}
+        for r in reports:
+            per.setdefault(r["id"], []).append(r["s"])
+        med = statistics.median(s for xs in per.values() for s in xs)
+        return {wid: statistics.fmean(xs) > threshold * med
+                for wid, xs in per.items()}

@@ -1,0 +1,69 @@
+"""Bounded-uncertainty clocks (paper §2.2) and drift-bounded timers (§5.3).
+
+``intervalNow()`` returns ``[earliest, latest]`` guaranteed to contain true
+time for at least one moment during the call. The simulation knows true time
+(the event loop clock) and perturbs it by per-call bounded errors, modeling
+AWS TimeSync / clock-bound style interval clocks (<= ``max_clock_error``).
+
+The two LeaseGuard age checks (paper §4.3):
+
+* a node **knows** ``t1`` is *more than Δ old* iff
+  ``t1.latest + Δ < intervalNow().earliest``    (commit gate — aggressive side)
+* a lease holder may read only while its entry is **not possibly** more than
+  Δ old: ``intervalNow().latest <= t1.latest + Δ``  (read gate — conservative
+  side)
+
+At any true moment at most one of the two can hold (earliest <= T <= latest),
+which is exactly the disjointness the Case-2 proof needs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .prob import PRNG
+from .simulate import EventLoop
+
+
+@dataclass(frozen=True)
+class TimeInterval:
+    earliest: float
+    latest: float
+
+    def __post_init__(self) -> None:
+        assert self.earliest <= self.latest
+
+
+class BoundedClock:
+    """Per-node interval clock with bounded, randomized uncertainty."""
+
+    def __init__(self, loop: EventLoop, prng: PRNG, max_error: float,
+                 faulty: bool = False, fault_skew: float = 0.0) -> None:
+        self.loop = loop
+        self.prng = prng
+        self.max_error = max_error
+        # ``faulty`` models a clock whose *claimed* bounds are wrong — used by
+        # tests to demonstrate the paper's §4.3 caveat (linearizability is
+        # forfeit if the interval does not contain true time).
+        self.faulty = faulty
+        self.fault_skew = fault_skew
+
+    def interval_now(self) -> TimeInterval:
+        t = self.loop.now
+        if self.faulty:
+            t = t + self.fault_skew  # true time now OUTSIDE claimed bounds
+        lo = self.prng.uniform(0.0, self.max_error)
+        hi = self.prng.uniform(0.0, self.max_error)
+        return TimeInterval(t - lo, t + hi)
+
+    # -- the two asymmetric age checks ------------------------------------
+    def definitely_older_than(self, t1: TimeInterval, delta: float) -> bool:
+        """Commit gate: provably more than ``delta`` old."""
+        return t1.latest + delta < self.interval_now().earliest
+
+    def possibly_older_than(self, t1: TimeInterval, delta: float) -> bool:
+        """Read gate: NOT safe to read iff possibly more than ``delta`` old."""
+        return self.interval_now().latest > t1.latest + delta
+
+    def lease_valid(self, t1: TimeInterval, delta: float) -> bool:
+        return not self.possibly_older_than(t1, delta)

@@ -1,0 +1,139 @@
+"""Simulated message-passing network with delays, partitions, and node I/O.
+
+Two latency components model the paper's experiments:
+
+* **network delay**: lognormal one-way latency per message (paper §6.4 uses
+  mean 1–10 ms for the latency study; §6.5 uses AWS same-subnet stats,
+  mean 191 µs, variance 391 µs²-scaled).
+* **I/O service time**: each node serializes outgoing message processing
+  through a single queue with a per-message service time. This models the
+  disk/NIC contention that makes quorum reads fight with replication for
+  I/O — the effect behind the paper's ~10x write-throughput gap (Figs. 9-11)
+  and the queueing blow-up in Fig. 10.
+
+RPC layer: ``call()`` returns a Future for the reply, with timeout. One-way
+``send()`` is also available. Partitions drop messages in both directions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .prob import PRNG
+from .simulate import EventLoop, Future, TimeoutError_, wait_for
+
+
+@dataclass
+class NetParams:
+    one_way_latency_mean: float = 191e-6
+    one_way_latency_variance: float = 391e-6 ** 2
+    io_service_time: float = 0.0       # per outgoing message, serialized per node
+    rpc_timeout: float = 0.5
+
+
+class Network:
+    def __init__(self, loop: EventLoop, prng: PRNG, params: NetParams) -> None:
+        self.loop = loop
+        self.prng = prng
+        self.params = params
+        self._handlers: dict[int, Callable[[int, Any], Any]] = {}
+        self._partitioned: set[frozenset[int]] = set()
+        self._down: set[int] = set()
+        self._io_busy_until: dict[int, float] = {}
+        self._rpc_seq = 0
+        self._pending: dict[int, Future] = {}
+        self.messages_sent = 0
+        self.bytes_sent = 0
+
+    # -- topology ----------------------------------------------------------
+    def register(self, node_id: int, handler: Callable[[int, Any], Any]) -> None:
+        """handler(src, msg) -> reply or None; called on delivery."""
+        self._handlers[node_id] = handler
+
+    def partition(self, a: int, b: int) -> None:
+        self._partitioned.add(frozenset((a, b)))
+
+    def heal(self, a: int = -1, b: int = -1) -> None:
+        if a < 0:
+            self._partitioned.clear()
+        else:
+            self._partitioned.discard(frozenset((a, b)))
+
+    def set_down(self, node_id: int, down: bool = True) -> None:
+        if down:
+            self._down.add(node_id)
+        else:
+            self._down.discard(node_id)
+
+    def reachable(self, src: int, dst: int) -> bool:
+        return (
+            src not in self._down
+            and dst not in self._down
+            and frozenset((src, dst)) not in self._partitioned
+        )
+
+    # -- I/O serialization ---------------------------------------------------
+    def _io_delay(self, node_id: int) -> float:
+        """Serialize a node's message processing through one I/O queue."""
+        svc = self.params.io_service_time
+        if svc <= 0:
+            return 0.0
+        start = max(self.loop.now, self._io_busy_until.get(node_id, 0.0))
+        self._io_busy_until[node_id] = start + svc
+        return (start + svc) - self.loop.now
+
+    # -- messaging -----------------------------------------------------------
+    def send(self, src: int, dst: int, msg: Any, size: int = 256) -> None:
+        """Fire-and-forget delivery (reply, if any, is discarded)."""
+        self._transmit(src, dst, msg, size, reply_to=None)
+
+    def call(self, src: int, dst: int, msg: Any, size: int = 256,
+             timeout: Optional[float] = None) -> "Future":
+        """RPC: deliver msg; handler's return value resolves the future."""
+        self._rpc_seq += 1
+        rid = self._rpc_seq
+        fut = Future(self.loop)
+        self._pending[rid] = fut
+        self._transmit(src, dst, msg, size, reply_to=rid)
+        return fut
+
+    async def call_wait(self, src: int, dst: int, msg: Any, size: int = 256,
+                        timeout: Optional[float] = None) -> Any:
+        t = timeout if timeout is not None else self.params.rpc_timeout
+        return await wait_for(self.call(src, dst, msg, size), t)
+
+    def _transmit(self, src: int, dst: int, msg: Any, size: int,
+                  reply_to: Optional[int]) -> None:
+        self.messages_sent += 1
+        self.bytes_sent += size
+        io = self._io_delay(src)
+        delay = io + self.prng.lognormal_mean_var(
+            self.params.one_way_latency_mean, self.params.one_way_latency_variance
+        )
+
+        def deliver() -> None:
+            if not self.reachable(src, dst):
+                return  # dropped; RPC future times out at caller
+            handler = self._handlers.get(dst)
+            if handler is None:
+                return
+            reply = handler(src, msg)
+            if reply_to is not None and reply is not None:
+                # reply travels back with its own I/O + network delay
+                rio = self._io_delay(dst)
+                rdelay = rio + self.prng.lognormal_mean_var(
+                    self.params.one_way_latency_mean,
+                    self.params.one_way_latency_variance,
+                )
+
+                def deliver_reply() -> None:
+                    if not self.reachable(dst, src):
+                        return
+                    fut = self._pending.pop(reply_to, None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(reply)
+
+                self.loop.call_later(rdelay, deliver_reply)
+
+        self.loop.call_later(delay, deliver)

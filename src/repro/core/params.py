@@ -1,0 +1,57 @@
+"""All protocol + simulation parameters in one place (paper §6.1 params.py)."""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class ReadMode(enum.Enum):
+    INCONSISTENT = "inconsistent"    # local read, no consistency mechanism
+    QUORUM = "quorum"                # Raft's default: per-read majority check
+    ONGARO_LEASE = "ongaro_lease"    # heartbeat-based lease ([41] §6.4.1)
+    LEASEGUARD = "leaseguard"        # this paper: the log is the lease
+
+
+@dataclass
+class RaftParams:
+    n_nodes: int = 3
+    election_timeout: float = 0.5          # ET
+    election_jitter: float = 0.2           # uniform extra per election cycle
+    heartbeat_interval: float = 0.05
+    rpc_timeout: float = 0.25
+    lease_duration: Optional[float] = None  # Δ; defaults to ET when None
+    read_mode: ReadMode = ReadMode.LEASEGUARD
+    # LeaseGuard optimization flags (paper §3.2, §3.3). With both False,
+    # this is the "log-based lease" configuration of Figs. 7/9.
+    defer_commit_writes: bool = True
+    inherited_lease_reads: bool = True
+    # lease upkeep (paper §5.1)
+    noop_on_election: bool = True
+    lease_maintenance: bool = True          # proactive no-op before expiry
+    # clocks (paper §2.2; AWS clock-bound preset is 50 µs)
+    max_clock_error: float = 50e-6
+    # client-visible timeouts
+    write_timeout: float = 2.0
+    read_timeout: float = 2.0
+    batch_max_entries: int = 128
+
+    @property
+    def delta(self) -> float:
+        return self.lease_duration if self.lease_duration is not None else self.election_timeout
+
+
+@dataclass
+class SimParams:
+    seed: int = 1
+    one_way_latency_mean: float = 191e-6    # AWS same-subnet (paper §6.5)
+    one_way_latency_variance: float = 391e-6 ** 2
+    io_service_time: float = 0.0            # >0 models I/O contention (Figs. 9-11)
+    sim_duration: float = 3.0
+    # workload (open loop, paper §6.3-6.6)
+    interarrival: float = 300e-6            # mean gap between client arrivals
+    write_fraction: float = 1.0 / 3.0
+    n_keys: int = 1000
+    zipf_a: float = 0.0                     # 0 = uniform
+    value_size: int = 1024

@@ -1,0 +1,650 @@
+"""Raft with LeaseGuard (paper §3, Fig. 2) plus three comparison mechanisms.
+
+One :class:`Node` implements:
+
+* vanilla Raft replication + elections (unmodified by LeaseGuard, §3);
+* **LeaseGuard**: the log is the lease — entries carry ``intervalNow()`` from
+  the writing leader's bounded-uncertainty clock; the commit gate (Fig. 2
+  CommitEntry) blocks a new leader while any prior-term entry is possibly
+  ``< Δ`` old; reads are local while the newest committed entry is ``< Δ``
+  old, with the limbo-region check for inherited leases (§3.3);
+* **deferred-commit writes** (§3.2): accept/replicate during the old lease,
+  fast-forward commitIndex when it expires;
+* **quorum reads** (Raft's default consistency): per-read majority round;
+* **Ongaro leases** ([41] §6.4.1 as implemented in paper §7.1): leader has a
+  lease iff a majority of its last-successful-AppendEntries start times are
+  ``< ET`` old; followers refuse to vote within ET of hearing from a leader.
+
+Efficiency notes mirror the paper's C++ (§7.1): the commit gate is O(1) via a
+cached ``last_prior_term_index``; the limbo check is O(1) via a key set
+(``setLimboRegion``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .clock import BoundedClock, TimeInterval
+from .network import Network
+from .params import RaftParams, ReadMode
+from .prob import PRNG
+from .simulate import Condition, EventLoop, Future, TimeoutError_, wait_for
+
+NOOP = "__noop__"
+END_LEASE = "__end_lease__"
+CONFIG = "__config__"          # single-node membership change (paper §4.4)
+
+
+@dataclass
+class LogEntry:
+    term: int
+    key: str                       # NOOP / END_LEASE for control entries
+    value: Any
+    interval: TimeInterval         # intervalNow() on the writing leader
+    execution_ts: Optional[float] = None  # true time committed+applied on leader
+
+    @property
+    def is_control(self) -> bool:
+        return self.key in (NOOP, END_LEASE, CONFIG)
+
+
+# ---------------------------------------------------------------- messages
+@dataclass
+class RequestVote:
+    term: int
+    candidate: int
+    last_log_index: int
+    last_log_term: int
+
+
+@dataclass
+class VoteReply:
+    term: int
+    granted: bool
+
+
+@dataclass
+class AppendEntries:
+    term: int
+    leader: int
+    prev_index: int
+    prev_term: int
+    entries: list
+    leader_commit: int
+
+
+@dataclass
+class AppendEntriesReply:
+    term: int
+    success: bool
+    match_index: int
+
+
+class WriteResult:
+    __slots__ = ("ok", "error", "entry")
+
+    def __init__(self, ok: bool, error: str = "",
+                 entry: Optional["LogEntry"] = None) -> None:
+        self.ok = ok
+        self.error = error
+        # The appended LogEntry object (shared across replicas in the sim):
+        # its ``execution_ts`` is set iff/when the write actually commits,
+        # which the omniscient checker uses to resolve ambiguous failures.
+        self.entry = entry
+
+
+class ReadResult:
+    __slots__ = ("ok", "value", "error", "execution_ts")
+
+    def __init__(self, ok: bool, value: Any = None, error: str = "",
+                 execution_ts: float = 0.0) -> None:
+        self.ok = ok
+        self.value = value
+        self.error = error
+        self.execution_ts = execution_ts
+
+
+_SENTINEL = LogEntry(term=0, key=NOOP, value=None,
+                     interval=TimeInterval(-1e18, -1e18))
+
+
+class Node:
+    def __init__(self, node_id: int, loop: EventLoop, net: Network,
+                 clock: BoundedClock, prng: PRNG, params: RaftParams,
+                 peers: list[int],
+                 on_leader: Optional[Callable[[int, int], None]] = None) -> None:
+        self.id = node_id
+        self.loop = loop
+        self.net = net
+        self.clock = clock
+        self.prng = prng
+        self.p = params
+        # membership: mutated only via CONFIG log entries (paper §4.4
+        # single-node changes — overlapping majorities preserve Leader
+        # Completeness, on which the lease argument rests)
+        self.config: set[int] = set(peers)
+        self.on_leader = on_leader
+
+        # persistent state
+        self.term = 0
+        self.voted_for: Optional[int] = None
+        self.log: list[LogEntry] = [_SENTINEL]
+
+        # volatile state
+        self.state = "follower"
+        self.commit_index = 0
+        self.last_applied = 0
+        self.data: dict[str, list] = {}
+        self.alive = True
+
+        # leader state
+        self.next_index: dict[int, int] = {}
+        self.match_index: dict[int, int] = {}
+        self.last_index_at_election = 0
+        self.limbo_keys: set[str] = set()
+        self.last_prior_term_index = 0
+        self.ongaro_s: dict[int, float] = {}
+        self._leader_epoch = 0   # bumps every leadership change; stops stale tasks
+
+        self._last_heartbeat = loop.now
+        self._cond = Condition(loop)     # commit/apply/state changes
+        self._new_entries = Condition(loop)
+        self._commit_recheck_scheduled = False
+        # fault injection: freeze the commitIndex the leader advertises so
+        # followers replicate entries without learning they are committed —
+        # used to engineer a large limbo region (paper §6.6 places 100
+        # entries in the limbo region to stress the skewness experiment).
+        self.freeze_commit_broadcast = False
+        self._frozen_commit = 0
+
+        net.register(node_id, self._on_message)
+        loop.create_task(self._election_timer())
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def last_log_index(self) -> int:
+        return len(self.log) - 1
+
+    @property
+    def peers(self) -> list[int]:
+        return [p for p in self.config if p != self.id]
+
+    def majority(self) -> int:
+        return len(self.config) // 2 + 1
+
+    def _refresh_config(self) -> None:
+        """Adopt the newest CONFIG entry in the log (Raft uses the latest
+        config as soon as it is appended, not committed)."""
+        for i in range(self.last_log_index, 0, -1):
+            if self.log[i].key == CONFIG:
+                self._adopt_config(set(self.log[i].value))
+                return
+
+    def _adopt_config(self, new: set) -> None:
+        added = new - self.config
+        self.config = set(new)
+        if self.state == "leader":
+            for p in added:
+                if p not in self.next_index:
+                    self.next_index[p] = self.last_log_index + 1
+                    self.match_index[p] = 0
+                    self.loop.create_task(
+                        self._replicate(p, self._leader_epoch))
+
+    def _signal(self) -> None:
+        self._cond.notify_all()
+
+    def is_leader(self) -> bool:
+        return self.state == "leader" and self.alive
+
+    # ------------------------------------------------------ crash / restart
+    def crash(self) -> None:
+        self.alive = False
+        self.state = "follower"
+        self._leader_epoch += 1
+        self.net.set_down(self.id, True)
+        self._signal()
+
+    def restart(self) -> None:
+        """Come back with persistent state (term, voted_for, log) intact."""
+        self.alive = True
+        self.state = "follower"
+        self.commit_index = 0
+        self.last_applied = 0
+        self.data = {}
+        self._last_heartbeat = self.loop.now
+        self._refresh_config()       # membership may have changed on disk
+        self.net.set_down(self.id, False)
+        self.loop.create_task(self._election_timer())
+
+    # --------------------------------------------------------- RPC handler
+    def _on_message(self, src: int, msg: Any) -> Any:
+        if not self.alive:
+            return None
+        if isinstance(msg, RequestVote):
+            return self._handle_vote(src, msg)
+        if isinstance(msg, AppendEntries):
+            return self._handle_append(src, msg)
+        return None
+
+    def _step_down(self, term: int) -> None:
+        if term > self.term:
+            self.term = term
+            self.voted_for = None
+        if self.state != "follower":
+            self.state = "follower"
+            self._leader_epoch += 1
+        self._signal()
+
+    def _handle_vote(self, src: int, msg: RequestVote) -> VoteReply:
+        if msg.term > self.term:
+            self._step_down(msg.term)
+        granted = False
+        if msg.term == self.term and self.voted_for in (None, msg.candidate):
+            up_to_date = (msg.last_log_term, msg.last_log_index) >= (
+                self.log[-1].term, self.last_log_index)
+            # Ongaro leases ([41] §6.4.1) depend on the rule that a node does
+            # not vote within ET of hearing from a leader. LeaseGuard
+            # deliberately does NOT delay elections (paper §3 "Elections").
+            vote_blocked = (
+                self.p.read_mode is ReadMode.ONGARO_LEASE
+                and self.loop.now - self._last_heartbeat < self.p.election_timeout
+            )
+            if up_to_date and not vote_blocked:
+                granted = True
+                self.voted_for = msg.candidate
+                self._last_heartbeat = self.loop.now
+        return VoteReply(self.term, granted)
+
+    def _handle_append(self, src: int, msg: AppendEntries) -> AppendEntriesReply:
+        if msg.term < self.term:
+            return AppendEntriesReply(self.term, False, 0)
+        if msg.term > self.term or self.state != "follower":
+            self._step_down(msg.term)
+        self._last_heartbeat = self.loop.now
+        # log consistency check
+        if msg.prev_index > self.last_log_index or \
+                self.log[msg.prev_index].term != msg.prev_term:
+            return AppendEntriesReply(self.term, False, 0)
+        # append / resolve conflicts
+        idx = msg.prev_index
+        config_touched = False
+        for e in msg.entries:
+            idx += 1
+            if idx <= self.last_log_index:
+                if self.log[idx].term != e.term:
+                    config_touched |= any(x.key == CONFIG
+                                          for x in self.log[idx:])
+                    del self.log[idx:]          # truncate conflicting suffix
+                    self.log.append(e)
+                    config_touched |= e.key == CONFIG
+            else:
+                self.log.append(e)
+                config_touched |= e.key == CONFIG
+        if config_touched:
+            self._refresh_config()
+        match = msg.prev_index + len(msg.entries)
+        if msg.leader_commit > self.commit_index:
+            self.commit_index = min(msg.leader_commit, self.last_log_index)
+            self._apply_committed()
+        return AppendEntriesReply(self.term, True, match)
+
+    # ------------------------------------------------------------ elections
+    async def _election_timer(self) -> None:
+        while self.alive:
+            timeout = self.p.election_timeout + self.prng.uniform(
+                0.0, self.p.election_jitter)
+            deadline = self._last_heartbeat + timeout
+            if self.loop.now < deadline:
+                await self.loop.sleep(deadline - self.loop.now)
+                continue
+            if self.state == "leader":
+                self._last_heartbeat = self.loop.now
+                continue
+            await self._run_for_election()
+
+    async def _run_for_election(self) -> None:
+        self.term += 1
+        term = self.term
+        self.state = "candidate"
+        self.voted_for = self.id
+        self._last_heartbeat = self.loop.now
+        msg = RequestVote(term, self.id, self.last_log_index, self.log[-1].term)
+        votes = 1
+        futs = [self.net.call(self.id, p, msg) for p in self.peers]
+        for f in futs:
+            try:
+                reply: VoteReply = await wait_for(f, self.p.rpc_timeout)
+            except TimeoutError_:
+                continue
+            if not self.alive or self.state != "candidate" or self.term != term:
+                return
+            if reply.term > self.term:
+                self._step_down(reply.term)
+                return
+            if reply.granted:
+                votes += 1
+            if votes >= self.majority():
+                self._become_leader()
+                return
+
+    def _become_leader(self) -> None:
+        self.state = "leader"
+        self._leader_epoch += 1
+        epoch = self._leader_epoch
+        self.next_index = {p: self.last_log_index + 1 for p in self.peers}
+        self.match_index = {p: 0 for p in self.peers}
+        self.ongaro_s = {}
+        self.last_index_at_election = self.last_log_index
+        # limbo region: (commitIndex, last log index at election]  (§3.3)
+        self.limbo_keys = {
+            self.log[i].key
+            for i in range(self.commit_index + 1, self.last_index_at_election + 1)
+            if not self.log[i].is_control
+        }
+        # O(1) commit-gate cache (§7.1): newest prior-term entry
+        self.last_prior_term_index = 0
+        for i in range(self.last_log_index, -1, -1):
+            if self.log[i].term < self.term:
+                self.last_prior_term_index = i
+                break
+        if self.p.noop_on_election:
+            self._append_local(NOOP, None)
+        for p in self.peers:
+            self.loop.create_task(self._replicate(p, epoch))
+        self.loop.create_task(self._lease_maintenance(epoch))
+        if self.on_leader is not None:
+            self.on_leader(self.id, self.term)
+        self._signal()
+
+    # ------------------------------------------------------------ leader ops
+    def _append_local(self, key: str, value: Any) -> int:
+        entry = LogEntry(self.term, key, value, self.clock.interval_now())
+        self.log.append(entry)
+        if key == CONFIG:
+            self._adopt_config(set(value))
+        self._new_entries.notify_all()
+        self._try_advance_commit()   # single-node replica sets commit locally
+        return self.last_log_index
+
+    async def _replicate(self, peer: int, epoch: int) -> None:
+        """Per-follower replication + heartbeat loop."""
+        while self.alive and self.state == "leader" \
+                and self._leader_epoch == epoch and peer in self.config:
+            ni = self.next_index[peer]
+            entries = self.log[ni: ni + self.p.batch_max_entries]
+            prev = ni - 1
+            if self.freeze_commit_broadcast:
+                advertised_commit = min(self._frozen_commit, self.commit_index)
+            else:
+                advertised_commit = self.commit_index
+            msg = AppendEntries(self.term, self.id, prev, self.log[prev].term,
+                                list(entries), advertised_commit)
+            start = self.loop.now
+            size = 256 + sum(64 + (len(e.value) if isinstance(e.value, (bytes, str))
+                                   else 8) for e in entries)
+            try:
+                reply: AppendEntriesReply = await wait_for(
+                    self.net.call(self.id, peer, msg, size=size),
+                    self.p.rpc_timeout)
+            except TimeoutError_:
+                continue
+            if not self.alive or self.state != "leader" or self._leader_epoch != epoch:
+                return
+            if reply.term > self.term:
+                self._step_down(reply.term)
+                return
+            if reply.success:
+                self.ongaro_s[peer] = start
+                if reply.match_index > self.match_index[peer]:
+                    self.match_index[peer] = reply.match_index
+                self.next_index[peer] = reply.match_index + 1
+                self._try_advance_commit()
+                if self.next_index[peer] > self.last_log_index:
+                    # up to date: wait for new entries or heartbeat tick
+                    await self._wait_new_entries(self.p.heartbeat_interval)
+            else:
+                self.next_index[peer] = max(1, self.next_index[peer] - 1)
+
+    async def _wait_new_entries(self, timeout: float) -> None:
+        """Wait until new entries are appended, or the heartbeat tick fires."""
+        f = Future(self.loop)
+        self._new_entries._waiters.append(f)
+        self.loop.call_later(timeout, lambda: f.set_result(None) if not f.done() else None)
+        await f
+
+    # -- the LeaseGuard commit gate (Fig. 2 CommitEntry) --------------------
+    def _commit_gate_blocked(self) -> bool:
+        if self.p.read_mode is not ReadMode.LEASEGUARD:
+            return False
+        i = self.last_prior_term_index
+        if i == 0:
+            return False
+        e = self.log[i]
+        if e.key == END_LEASE and e.term == self.log[self.last_index_at_election].term:
+            # planned handover (§5.1): prior leader relinquished its lease.
+            return False
+        return not self.clock.definitely_older_than(e.interval, self.p.delta)
+
+    def _try_advance_commit(self) -> None:
+        if self.state != "leader" or not self.alive:
+            return
+        if self._commit_gate_blocked():
+            self._schedule_commit_recheck()
+            return
+        matches = sorted([v for p, v in self.match_index.items()
+                          if p in self.config] + [self.last_log_index],
+                         reverse=True)
+        m = matches[self.majority() - 1]
+        # standard Raft: only count-commit entries of the current term
+        while m > self.commit_index and self.log[m].term != self.term:
+            m -= 1
+        if m > self.commit_index:
+            self.commit_index = m
+            self._apply_committed()
+
+    def _schedule_commit_recheck(self) -> None:
+        if self._commit_recheck_scheduled:
+            return
+        self._commit_recheck_scheduled = True
+        e = self.log[self.last_prior_term_index]
+        eta = max(0.0, e.interval.latest + self.p.delta - self.loop.now) \
+            + 2 * self.clock.max_error + 1e-6
+
+        def recheck() -> None:
+            self._commit_recheck_scheduled = False
+            self._try_advance_commit()
+
+        self.loop.call_later(eta, recheck)
+
+    def _apply_committed(self) -> None:
+        advanced = False
+        while self.last_applied < self.commit_index:
+            self.last_applied += 1
+            e = self.log[self.last_applied]
+            if not e.is_control:
+                self.data.setdefault(e.key, []).append(e.value)
+            if self.state == "leader" and e.execution_ts is None:
+                e.execution_ts = self.loop.now   # commit-on-leader time (§6.2)
+            advanced = True
+        if advanced:
+            if self.state == "leader" and self.limbo_keys and \
+                    self.log[self.commit_index].term == self.term:
+                self.limbo_keys = set()          # own-term commit ends limbo
+            self._signal()
+
+    # -- lease upkeep (§5.1) -------------------------------------------------
+    async def _lease_maintenance(self, epoch: int) -> None:
+        if not self.p.lease_maintenance or \
+                self.p.read_mode is not ReadMode.LEASEGUARD:
+            return
+        interval = max(self.p.delta / 4.0, 2 * self.p.heartbeat_interval)
+        while self.alive and self.state == "leader" and self._leader_epoch == epoch:
+            await self.loop.sleep(interval)
+            if not (self.alive and self.state == "leader"
+                    and self._leader_epoch == epoch):
+                return
+            e = self.log[self.commit_index]
+            # refresh when the lease is past half its life and nothing newer
+            # is in flight to extend it
+            if self.last_log_index == self.commit_index and \
+                    self.clock.possibly_older_than(e.interval, self.p.delta / 2):
+                self._append_local(NOOP, None)
+
+    async def change_membership(self, new_config: set) -> WriteResult:
+        """Single-node reconfiguration (paper §4.4): add or remove ONE
+        node. The CONFIG entry is an ordinary log entry — it carries a
+        clock interval, extends the lease, and obeys the commit gate, so
+        all LeaseGuard guarantees hold across the change (overlapping
+        majorities preserve Leader Completeness)."""
+        if not self.is_leader():
+            return WriteResult(False, "not_leader")
+        new_config = set(new_config)
+        if len(new_config ^ self.config) != 1:
+            return WriteResult(False, "only_single_node_changes")
+        if self.id not in new_config:
+            return WriteResult(False, "cannot_remove_leader")
+        # one reconfiguration at a time: prior CONFIG must be committed
+        for i in range(self.last_log_index, self.commit_index, -1):
+            if self.log[i].key == CONFIG:
+                return WriteResult(False, "reconfig_in_progress")
+        index = self._append_local(CONFIG, sorted(new_config))
+        entry = self.log[index]
+        deadline = self.loop.now + self.p.write_timeout
+        while self.alive:
+            if self.last_applied >= index and len(self.log) > index \
+                    and self.log[index] is entry:
+                return WriteResult(True, entry=entry)
+            if self.state != "leader" or self.loop.now >= deadline:
+                return WriteResult(False, "failed", entry=entry)
+            await self._cond_wait(deadline)
+        return WriteResult(False, "crashed", entry=entry)
+
+    def freeze_commits(self) -> None:
+        """Fault injection: stop advertising commitIndex advances."""
+        self._frozen_commit = self.commit_index
+        self.freeze_commit_broadcast = True
+
+    def relinquish_lease(self) -> None:
+        """Planned handover (§5.1): commit an end-lease entry, then step down."""
+        if self.is_leader():
+            self._append_local(END_LEASE, None)
+
+    # ---------------------------------------------------------- client API
+    def _has_lease_for_read(self) -> tuple[bool, str]:
+        e = self.log[self.commit_index]
+        if not self.clock.lease_valid(e.interval, self.p.delta):
+            return False, "no_lease"
+        if e.term != self.term:
+            # inherited lease (§3.3)
+            if not self.p.inherited_lease_reads:
+                return False, "no_lease"
+        return True, ""
+
+    def _ongaro_has_lease(self) -> bool:
+        fresh = 1  # self counts as "now"
+        for p in self.peers:
+            s = self.ongaro_s.get(p)
+            if s is not None and self.loop.now - s < self.p.election_timeout:
+                fresh += 1
+        return fresh >= self.majority()
+
+    async def client_write(self, key: str, value: Any) -> WriteResult:
+        if not self.is_leader():
+            return WriteResult(False, "not_leader")
+        if self.p.read_mode is ReadMode.LEASEGUARD and \
+                not self.p.defer_commit_writes and self._commit_gate_blocked():
+            # unoptimized log-based lease: refuse writes during the old lease
+            return WriteResult(False, "no_lease")
+        term0 = self.term
+        index = self._append_local(key, value)
+        entry = self.log[index]
+        deadline = self.loop.now + self.p.write_timeout
+        while self.alive:
+            if self.last_applied >= index:
+                if len(self.log) > index and self.log[index] is entry:
+                    return WriteResult(True, entry=entry)
+                return WriteResult(False, "not_leader", entry=entry)  # lost
+            if self.state != "leader" or self.term != term0:
+                return WriteResult(False, "not_leader", entry=entry)  # unknown
+            if self.loop.now >= deadline:
+                return WriteResult(False, "timeout", entry=entry)
+            await self._cond_wait(deadline)
+        return WriteResult(False, "crashed", entry=entry)
+
+    async def client_read(self, key: str) -> ReadResult:
+        if not self.is_leader():
+            return ReadResult(False, error="not_leader")
+        mode = self.p.read_mode
+        if mode is ReadMode.INCONSISTENT:
+            return ReadResult(True, list(self.data.get(key, [])),
+                              execution_ts=self.loop.now)
+        if mode is ReadMode.QUORUM:
+            return await self._quorum_read(key)
+        if mode is ReadMode.ONGARO_LEASE:
+            if not self._ongaro_has_lease():
+                return ReadResult(False, error="no_lease")
+            return await self._finish_local_read(key, self.term)
+        # LEASEGUARD
+        ok, err = self._has_lease_for_read()
+        if not ok:
+            return ReadResult(False, error=err)
+        e = self.log[self.commit_index]
+        if e.term != self.term and key in self.limbo_keys:
+            return ReadResult(False, error="limbo")     # §3.3 limbo check
+        return await self._finish_local_read(key, self.term,
+                                             recheck_lease=True)
+
+    async def _finish_local_read(self, key: str, term0: int,
+                                 recheck_lease: bool = False) -> ReadResult:
+        """Wait lastApplied >= commitIndex-at-arrival, then read (Fig. 2)."""
+        ci = self.commit_index
+        deadline = self.loop.now + self.p.read_timeout
+        while self.alive and self.is_leader() and self.term == term0:
+            if self.last_applied >= ci:
+                if recheck_lease:
+                    ok, err = self._has_lease_for_read()
+                    if not ok:
+                        return ReadResult(False, error=err)
+                    e = self.log[self.commit_index]
+                    if e.term != self.term and key in self.limbo_keys:
+                        return ReadResult(False, error="limbo")
+                return ReadResult(True, list(self.data.get(key, [])),
+                                  execution_ts=self.loop.now)
+            if self.loop.now >= deadline:
+                return ReadResult(False, error="timeout")
+            await self._cond_wait(deadline)
+        return ReadResult(False, error="not_leader")
+
+    async def _quorum_read(self, key: str) -> ReadResult:
+        """Raft's default: confirm leadership with a majority, then read."""
+        term0 = self.term
+        ci = self.commit_index
+        msg = AppendEntries(self.term, self.id, self.last_log_index,
+                            self.log[-1].term, [], self.commit_index)
+        futs = [self.net.call(self.id, p, msg) for p in self.peers]
+        acks = 1
+        for f in futs:
+            try:
+                reply: AppendEntriesReply = await wait_for(f, self.p.rpc_timeout)
+            except TimeoutError_:
+                continue
+            if reply.term > self.term:
+                self._step_down(reply.term)
+                return ReadResult(False, error="not_leader")
+            if reply.success:
+                acks += 1
+            if acks >= self.majority():
+                break
+        if acks < self.majority() or self.term != term0 or not self.is_leader():
+            return ReadResult(False, error="no_quorum")
+        res = await self._finish_local_read(key, term0)
+        return res
+
+    async def _cond_wait(self, deadline: float) -> None:
+        f = Future(self.loop)
+        self._cond._waiters.append(f)
+        self.loop.call_later(max(0.0, deadline - self.loop.now) + 1e-9,
+                             lambda: f.set_result(None) if not f.done() else None)
+        await f

@@ -1,0 +1,168 @@
+"""Build a replica set, run a workload, gather stats (paper run_with_params).
+
+This is the entry point used by tests, benchmarks, and examples. Given
+(RaftParams, SimParams, seed) it is fully deterministic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .checker import check_linearizability
+from .client import ClientLogEntry, Directory, Workload
+from .clock import BoundedClock
+from .network import NetParams, Network
+from .params import RaftParams, SimParams
+from .prob import PRNG
+from .raft import Node
+from .simulate import EventLoop
+
+
+@dataclass
+class Cluster:
+    loop: EventLoop
+    net: Network
+    nodes: dict[int, Node]
+    directory: Directory
+    prng: PRNG
+
+    def leader(self) -> Optional[Node]:
+        lid = self.directory.leader_id
+        return self.nodes.get(lid) if lid is not None else None
+
+    def wait_for_leader(self, max_time: float = 10.0) -> Node:
+        deadline = self.loop.now + max_time
+        while self.loop.now < deadline:
+            self.loop.run_until(self.loop.now + 0.01)
+            for n in self.nodes.values():
+                if n.is_leader():
+                    return n
+        raise RuntimeError("no leader elected")
+
+    def spawn_node(self, node_id: int, raft: RaftParams,
+                   max_clock_error: float = 50e-6) -> Node:
+        """Create a fresh follower (elastic scaling; it joins the replica
+        set once a leader commits the CONFIG entry that includes it)."""
+        from .clock import BoundedClock
+        clock = BoundedClock(self.loop, self.prng.fork(600 + node_id),
+                             max_clock_error)
+        node = Node(node_id, self.loop, self.net, clock,
+                    self.prng.fork(700 + node_id), raft,
+                    [node_id],        # starts alone; adopts config from log
+                    on_leader=self.directory.on_leader)
+        self.nodes[node_id] = node
+        return node
+
+
+def build_cluster(raft: RaftParams, sim: SimParams,
+                  clock_faults: Optional[dict[int, float]] = None) -> Cluster:
+    loop = EventLoop()
+    prng = PRNG(sim.seed)
+    net = Network(loop, prng.fork(101), NetParams(
+        one_way_latency_mean=sim.one_way_latency_mean,
+        one_way_latency_variance=sim.one_way_latency_variance,
+        io_service_time=sim.io_service_time,
+        rpc_timeout=raft.rpc_timeout,
+    ))
+    directory = Directory()
+    ids = list(range(raft.n_nodes))
+    nodes = {}
+    for i in ids:
+        fault = (clock_faults or {}).get(i, 0.0)
+        clock = BoundedClock(loop, prng.fork(200 + i), raft.max_clock_error,
+                             faulty=fault != 0.0, fault_skew=fault)
+        nodes[i] = Node(i, loop, net, clock, prng.fork(300 + i), raft, ids,
+                        on_leader=directory.on_leader)
+    return Cluster(loop, net, nodes, directory, prng)
+
+
+@dataclass
+class RunResult:
+    history: list[ClientLogEntry]
+    reads_ok: int = 0
+    reads_fail: int = 0
+    writes_ok: int = 0
+    writes_fail: int = 0
+    read_latencies: list[float] = field(default_factory=list)
+    write_latencies: list[float] = field(default_factory=list)
+    linearizable_ops: int = 0
+
+    def summarize(self) -> dict:
+        import statistics as st
+
+        def pct(xs, q):
+            if not xs:
+                return float("nan")
+            xs = sorted(xs)
+            k = min(len(xs) - 1, int(q * len(xs)))
+            return xs[k]
+
+        return {
+            "reads_ok": self.reads_ok, "reads_fail": self.reads_fail,
+            "writes_ok": self.writes_ok, "writes_fail": self.writes_fail,
+            "read_p50": pct(self.read_latencies, 0.50),
+            "read_p90": pct(self.read_latencies, 0.90),
+            "write_p50": pct(self.write_latencies, 0.50),
+            "write_p90": pct(self.write_latencies, 0.90),
+            "read_mean": st.fmean(self.read_latencies) if self.read_latencies else float("nan"),
+            "write_mean": st.fmean(self.write_latencies) if self.write_latencies else float("nan"),
+        }
+
+
+def run_workload(raft: RaftParams, sim: SimParams,
+                 fault_script: Optional[Callable[[Cluster], None]] = None,
+                 check: bool = True,
+                 settle_time: float = 1.0) -> RunResult:
+    """End-to-end deterministic run.
+
+    ``fault_script(cluster)`` may schedule crashes/partitions on the loop
+    before the workload starts (paper §6.5 crashes the leader at t=0.5s).
+    """
+    cluster = build_cluster(raft, sim)
+    loop = cluster.loop
+    cluster.wait_for_leader()
+    t0 = loop.now
+    workload = Workload(loop, cluster.nodes, cluster.directory,
+                        cluster.prng.fork(999), sim)
+    if fault_script is not None:
+        fault_script(cluster)
+    loop.create_task(workload.run(sim.sim_duration))
+    loop.run_until(t0 + sim.sim_duration + settle_time)
+    history = workload.finalize()
+
+    res = RunResult(history=history)
+    for op in history:
+        lat = op.end_ts - op.start_ts
+        if op.op_type == "Read":
+            if op.success:
+                res.reads_ok += 1
+                res.read_latencies.append(lat)
+            else:
+                res.reads_fail += 1
+        else:
+            if op.success:
+                res.writes_ok += 1
+                res.write_latencies.append(lat)
+            else:
+                res.writes_fail += 1
+    if check:
+        res.linearizable_ops = check_linearizability(history)
+    return res
+
+
+def throughput_timeline(history: list[ClientLogEntry], bin_size: float,
+                        t_start: float, t_end: float) -> list[dict]:
+    """Per-bin successful read/write counts — the paper's availability plots."""
+    n_bins = int((t_end - t_start) / bin_size) + 1
+    bins = [{"t": t_start + i * bin_size, "reads": 0, "writes": 0,
+             "read_fail": 0, "write_fail": 0} for i in range(n_bins)]
+    for op in history:
+        i = int((op.end_ts - t_start) / bin_size)
+        if 0 <= i < n_bins:
+            b = bins[i]
+            if op.op_type == "Read":
+                b["reads" if op.success else "read_fail"] += 1
+            else:
+                b["writes" if op.success else "write_fail"] += 1
+    return bins

@@ -1,0 +1,262 @@
+"""Deterministic discrete-event simulator (paper §6.1, ``simulate.py``).
+
+An event loop with callbacks scheduled at future simulated times, plus a
+task/future/coroutine layer similar to Python's asyncio — but fully
+deterministic: given a seed and parameters, every run executes the same
+events in the same order.
+
+Time is a float in **seconds** of simulated "true time". Nodes never read
+this directly; they use :class:`repro.core.clock.BoundedClock`, which wraps
+true time in an uncertainty interval.
+"""
+
+from __future__ import annotations
+
+import heapq
+import inspect
+from typing import Any, Callable, Coroutine, Iterable, Optional
+
+
+class EventLoop:
+    """A deterministic event loop over simulated time."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0  # tie-breaker: FIFO among same-deadline callbacks
+        self.now: float = 0.0
+        self._stopped = False
+
+    # -- scheduling ------------------------------------------------------
+    def call_at(self, when: float, fn: Callable[[], None]) -> None:
+        if when < self.now:
+            when = self.now
+        heapq.heappush(self._heap, (when, self._seq, fn))
+        self._seq += 1
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> None:
+        self.call_at(self.now + max(0.0, delay), fn)
+
+    def call_soon(self, fn: Callable[[], None]) -> None:
+        self.call_at(self.now, fn)
+
+    # -- running ---------------------------------------------------------
+    def _step(self) -> bool:
+        if not self._heap:
+            return False
+        when, _, fn = heapq.heappop(self._heap)
+        self.now = max(self.now, when)
+        fn()
+        return True
+
+    def run_until(self, deadline: float) -> None:
+        """Run events with time <= deadline; advance clock to deadline."""
+        while self._heap and self._heap[0][0] <= deadline and not self._stopped:
+            self._step()
+        self.now = max(self.now, deadline)
+
+    def run_until_complete(self, fut: "Future", max_time: float = float("inf")):
+        while not fut.done():
+            if self._stopped or not self._heap or self._heap[0][0] > max_time:
+                raise RuntimeError(
+                    f"future not resolved by t={self.now:.6f} "
+                    f"(heap={'empty' if not self._heap else 'future events'})"
+                )
+            self._step()
+        return fut.result()
+
+    def run(self, max_time: float = float("inf")) -> None:
+        while self._heap and not self._stopped and self._heap[0][0] <= max_time:
+            self._step()
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    # -- coroutine layer --------------------------------------------------
+    def create_task(self, coro: Coroutine) -> "Task":
+        return Task(self, coro)
+
+    def sleep(self, delay: float) -> "Future":
+        f = Future(self)
+        self.call_later(delay, lambda: f.set_result(None) if not f.done() else None)
+        return f
+
+
+class Future:
+    """Awaitable one-shot result container bound to an :class:`EventLoop`."""
+
+    __slots__ = ("loop", "_done", "_result", "_exc", "_callbacks")
+
+    def __init__(self, loop: EventLoop) -> None:
+        self.loop = loop
+        self._done = False
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+        self._callbacks: list[Callable[["Future"], None]] = []
+
+    def done(self) -> bool:
+        return self._done
+
+    def set_result(self, value: Any) -> None:
+        if self._done:
+            raise RuntimeError("future already resolved")
+        self._done = True
+        self._result = value
+        self._fire()
+
+    def set_exception(self, exc: BaseException) -> None:
+        if self._done:
+            raise RuntimeError("future already resolved")
+        self._done = True
+        self._exc = exc
+        self._fire()
+
+    def _fire(self) -> None:
+        cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            # run callbacks "soon" to keep a clean, deterministic stack
+            self.loop.call_soon(lambda cb=cb: cb(self))
+
+    def add_done_callback(self, cb: Callable[["Future"], None]) -> None:
+        if self._done:
+            self.loop.call_soon(lambda: cb(self))
+        else:
+            self._callbacks.append(cb)
+
+    def result(self) -> Any:
+        if not self._done:
+            raise RuntimeError("future not done")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def __await__(self):
+        if not self._done:
+            yield self
+        return self.result()
+
+
+class Task(Future):
+    """Drives a coroutine on the event loop. Awaitable like a Future."""
+
+    def __init__(self, loop: EventLoop, coro: Coroutine) -> None:
+        super().__init__(loop)
+        assert inspect.iscoroutine(coro), coro
+        self._coro = coro
+        self._cancelled = False
+        loop.call_soon(lambda: self._advance(None, None))
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+    def _advance(self, value: Any, exc: Optional[BaseException]) -> None:
+        if self._done:
+            return
+        if self._cancelled:
+            self._coro.close()
+            if not self._done:
+                self.set_exception(CancelledError())
+            return
+        try:
+            if exc is not None:
+                awaited = self._coro.throw(exc)
+            else:
+                awaited = self._coro.send(value)
+        except StopIteration as stop:
+            self.set_result(stop.value)
+            return
+        except BaseException as e:  # noqa: BLE001 - propagate into the future
+            self.set_exception(e)
+            return
+        assert isinstance(awaited, Future), f"can only await Futures, got {awaited!r}"
+
+        def _resume(fut: Future) -> None:
+            try:
+                res = fut.result()
+            except BaseException as e:  # noqa: BLE001
+                self._advance(None, e)
+            else:
+                self._advance(res, None)
+
+        awaited.add_done_callback(_resume)
+
+
+class CancelledError(Exception):
+    pass
+
+
+class TimeoutError_(Exception):
+    pass
+
+
+async def wait_for(fut: Future, timeout: float) -> Any:
+    """Await ``fut`` with a simulated-time timeout."""
+    loop = fut.loop
+    waiter = Future(loop)
+
+    def _on_done(f: Future) -> None:
+        if not waiter.done():
+            waiter.set_result(("ok", f))
+
+    def _on_timeout() -> None:
+        if not waiter.done():
+            waiter.set_result(("timeout", None))
+
+    fut.add_done_callback(_on_done)
+    loop.call_later(timeout, _on_timeout)
+    kind, f = await waiter
+    if kind == "timeout":
+        raise TimeoutError_(f"timed out after {timeout}s")
+    return f.result()
+
+
+async def gather(futs: Iterable[Future]) -> list:
+    return [await f for f in futs]
+
+
+class Event:
+    """An asyncio.Event lookalike over simulated time."""
+
+    def __init__(self, loop: EventLoop) -> None:
+        self.loop = loop
+        self._set = False
+        self._waiters: list[Future] = []
+
+    def is_set(self) -> bool:
+        return self._set
+
+    def set(self) -> None:
+        self._set = True
+        ws, self._waiters = self._waiters, []
+        for w in ws:
+            if not w.done():
+                w.set_result(None)
+
+    def clear(self) -> None:
+        self._set = False
+
+    async def wait(self) -> None:
+        if self._set:
+            return
+        f = Future(self.loop)
+        self._waiters.append(f)
+        await f
+
+
+class Condition:
+    """Broadcast wakeup: tasks await a predicate re-checked on notify."""
+
+    def __init__(self, loop: EventLoop) -> None:
+        self.loop = loop
+        self._waiters: list[Future] = []
+
+    def notify_all(self) -> None:
+        ws, self._waiters = self._waiters, []
+        for w in ws:
+            if not w.done():
+                w.set_result(None)
+
+    async def wait_until(self, predicate: Callable[[], bool]) -> None:
+        while not predicate():
+            f = Future(self.loop)
+            self._waiters.append(f)
+            await f

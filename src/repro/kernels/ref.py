@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the source of truth in
+kernel allclose tests)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd). Dense causal attention with
+    GQA via explicit repeat — O(S^2) memory, small-shape oracle only."""
+    bh, sq, hd = q.shape
+    bhkv, sk, _ = k.shape
+    n_rep = bh // bhkv
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array) -> jax.Array:
+    """Token-by-token WKV6 recurrence (fp32). r,k,v,w: (BH,S,hd);
+    u: (BH,hd)."""
+    def step(state, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("bi,bij->bj", rt,
+                       state + u[:, :, None] * kv)
+        return wt[:, :, None] * state + kv, y
+
+    bh, s, hd = r.shape
+    state0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    seq = tuple(x.astype(jnp.float32).transpose(1, 0, 2) for x in (r, k, v, w))
+    _, ys = jax.lax.scan(step, state0, seq)
+    return ys.transpose(1, 0, 2)

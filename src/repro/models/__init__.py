@@ -1,0 +1,5 @@
+from .transformer import (decode_step, forward_train, hidden_states,
+                          init_decode_cache, init_params, prefill)
+
+__all__ = ["decode_step", "forward_train", "hidden_states",
+           "init_decode_cache", "init_params", "prefill"]

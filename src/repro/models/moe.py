@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch
+(GShard-style scatter/gather — static shapes, shards cleanly with experts
+on the 'model'/'expert' mesh axis), optional parallel dense residual
+(arctic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.ctx import constrain
+from .layers import dense_init
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(keys[0], (d, e), jnp.float32),  # fp32 routing
+        "w_gate": dense_init(keys[1], (e, d, f), dtype),
+        "w_up": dense_init(keys[2], (e, d, f), dtype),
+        "w_down": dense_init(keys[3], (e, f, d), dtype),
+    }
+    if cfg.moe_dense_residual:
+        ks = jax.random.split(keys[4], 3)
+        p["dense"] = {
+            "w_gate": dense_init(ks[0], (d, f), dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype),
+            "w_down": dense_init(ks[2], (f, d), dtype),
+        }
+    return p
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (T, d) tokens (caller flattens batch×seq). Returns (out, aux_loss).
+
+    Dispatch layouts (``repro.sharding.ctx.moe_groups()`` selects):
+    * flat (1 group): one global capacity pool — simple, but with tokens
+      sharded over `data` the scatter-add produces PARTIAL buffers that
+      GSPMD all-reduces (§Perf iteration 6 baseline);
+    * group-local (n_groups = dp extent): each data shard owns a private
+      capacity slice of every expert — the scatter/gather become local
+      writes + one all-gather of the bf16 buffer over `data`, removing
+      both dispatch all-reduces. Classic GShard "group" dispatch, aligned
+      so the group dim shards exactly like the batch.
+    """
+    from ..sharding.ctx import moe_groups
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    f = cfg.d_ff
+    groups = moe_groups()
+    if groups > 1 and t % groups == 0:
+        return _apply_moe_grouped(p, x, cfg, groups)
+
+    logits = jnp.dot(x.astype(jnp.float32), p["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # capacity-based dispatch
+    capacity = max(1, int(cfg.capacity_factor * t * k / e))
+    flat_e = expert_idx.reshape(-1)                             # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                   # rank+1
+    pos = jnp.sum(pos, axis=-1) - 1                             # (T*k,)
+    valid = pos < capacity
+    pos_c = jnp.clip(pos, 0, capacity - 1)
+
+    x_rep = jnp.repeat(x, k, axis=0)                            # (T*k, d)
+    x_rep = x_rep * valid[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].add(x_rep)                      # scatter
+    # expert dim on the model axis (EP); the scatter above becomes the
+    # all-to-all token dispatch. (Tiling capacity over data as well was
+    # tried and REFUTED: GSPMD resolves the token->tile scatter by full
+    # replication, 6x worse — see EXPERIMENTS.md §Perf.)
+    buf = constrain(buf, "tp", None, None)
+
+    # expert FFN, batched over experts: shards with E on the model axis
+    g = constrain(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]),
+                  "tp", None, None)
+    u = constrain(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]),
+                  "tp", None, None)
+    h = jax.nn.silu(g) * u
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, p["w_down"]),
+                        "tp", None, None)                       # (E, C, d)
+
+    # combine: gather each token's expert outputs, weight by gates
+    gathered = out_buf[flat_e, pos_c]                           # (T*k, d)
+    gathered = gathered * (gate_vals.reshape(-1, 1).astype(x.dtype)
+                           * valid[:, None].astype(x.dtype))
+    out = jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+    if cfg.moe_dense_residual:
+        out = out + _dense_residual(p, x)
+    return out, aux
+
+
+def _dense_residual(p: dict, x: jax.Array) -> jax.Array:
+    dp = p["dense"]
+    g = constrain(jnp.dot(x, dp["w_gate"]), "dp", "tp")
+    u = constrain(jnp.dot(x, dp["w_up"]), "dp", "tp")
+    return constrain(jnp.dot(jax.nn.silu(g) * u, dp["w_down"]), "dp", None)
+
+
+def _apply_moe_grouped(p: dict, x: jax.Array, cfg: ArchConfig,
+                       groups: int) -> tuple[jax.Array, jax.Array]:
+    """Group-local dispatch (§Perf iteration 6): the token axis is split
+    into ``groups`` contiguous slices aligned with the `data` sharding;
+    each group has a private per-expert capacity slice, so the dispatch
+    scatter and combine gather touch only group-local rows."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tg = t // groups
+
+    logits = jnp.dot(x.astype(jnp.float32), p["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap_g = max(1, int(cfg.capacity_factor * tg * k / e))
+    flat_e = expert_idx.reshape(groups, tg * k)                 # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (G, Tg*k, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot                   # rank+1
+    pos = jnp.sum(pos, axis=-1) - 1                             # (G, Tg*k)
+    valid = pos < cap_g
+    pos_c = jnp.clip(pos, 0, cap_g - 1)
+
+    x_rep = jnp.repeat(x.reshape(groups, tg, d), k, axis=1)     # (G, Tg*k, d)
+    x_rep = constrain(x_rep * valid[..., None].astype(x.dtype),
+                      "dp", None, None)
+    # group-local scatter: each group writes only its own capacity slice
+    buf = jnp.zeros((groups, e, cap_g, d), x.dtype)
+    gidx = jnp.arange(groups)[:, None].repeat(tg * k, 1)        # (G, Tg*k)
+    buf = buf.at[gidx, flat_e, pos_c].add(x_rep)
+    # experts on tp, groups stay on dp END-TO-END (4-D einsums: merging
+    # (G@dp, Cg) into one dim would force GSPMD to replicate); expert
+    # weights are FSDP-sharded on their NON-contraction dim (rules.py) so
+    # the matmuls gather weights over data instead of all-reducing
+    # (E, G, Cg, f) partials
+    buf = constrain(buf.transpose(1, 0, 2, 3), "tp", "dp", None, None)
+
+    g_ = constrain(jnp.einsum("egcd,edf->egcf", buf, p["w_gate"]),
+                   "tp", "dp", None, None)
+    u_ = constrain(jnp.einsum("egcd,edf->egcf", buf, p["w_up"]),
+                   "tp", "dp", None, None)
+    h = jax.nn.silu(g_) * u_
+    out_buf = constrain(jnp.einsum("egcf,efd->egcd", h, p["w_down"]),
+                        "tp", "dp", None, None)
+    out_buf = out_buf.transpose(1, 0, 2, 3)
+
+    gathered = out_buf[gidx, flat_e, pos_c]                     # (G, Tg*k, d)
+    gathered = gathered * (gate_vals.reshape(groups, tg * k, 1)
+                           .astype(x.dtype) * valid[..., None].astype(x.dtype))
+    out = jnp.sum(gathered.reshape(groups, tg, k, d), axis=2)
+    out = constrain(out.reshape(t, d), "dp", None)
+
+    if cfg.moe_dense_residual:
+        out = out + _dense_residual(p, x)
+    return out, aux

@@ -1,0 +1,502 @@
+"""Loop-aware roofline analysis from compiled HLO text.
+
+``compiled.cost_analysis()`` counts each HLO op ONCE — a ``lax.scan`` body
+(our layer loop, grad-accum loop, and SSM time loop) is counted a single
+time regardless of trip count, which would understate a 48-layer model by
+48x. This module re-derives the three roofline terms from the HLO text
+with **while-loop trip multiplication**:
+
+* parse computations and ops (opcode, result shape/dtype, operand refs);
+* find ``while`` ops, recover trip counts from the loop-condition's
+  comparison constant, and multiply nested body costs;
+* FLOPs: 2·M·N·K for every ``dot`` (contraction dims parsed from
+  ``dot_dimension_numbers``); convolutions likewise. Elementwise flops are
+  ignored (matmul-dominated workloads; the gap shows up in the
+  MODEL_FLOPS/HLO_FLOPS ratio instead);
+* HBM bytes: every top-level op is an HBM-to-HBM kernel post-fusion, so
+  traffic ≈ Σ (operand bytes + result bytes) over non-trivial ops;
+* collective bytes: per-device link traffic with a ring model —
+  all-reduce 2(g-1)/g·n, all-gather/reduce-scatter (g-1)/g·n_full,
+  all-to-all (g-1)/g·n, collective-permute n.
+
+Terms (seconds, per device — the workload is SPMD so per-device = critical
+path):
+    compute    = flops_per_dev / PEAK_FLOPS_BF16
+    memory     = hbm_bytes_per_dev / HBM_BW
+    collective = link_bytes_per_dev / ICI_BW
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes. Tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# result type = everything (lazily) up to the first "opcode(" token; this
+# survives tuple types with /*index=N*/ comments.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s([\w\-]+)\(")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(3), m.group(2), line)
+            cur.ops[op.name] = op
+            cur.order.append(op.name)
+    return comps
+
+
+def _called_computations(line: str) -> list[str]:
+    out = []
+    for key in ("calls=", "to_apply=", "body=", "condition=",
+                "true_computation=", "false_computation="):
+        for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", line):
+            out.append(m.group(1))
+    return out
+
+
+def _while_parts(line: str) -> tuple[Optional[str], Optional[str]]:
+    body = re.search(r"body=%?([\w\.\-]+)", line)
+    cond = re.search(r"condition=%?([\w\.\-]+)", line)
+    return (body.group(1) if body else None, cond.group(1) if cond else None)
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Heuristic: the largest integer constant in the loop condition."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops.values():
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, defs: dict[str, str]) -> float:
+    """2*M*N*K from result shape and contracting dims of the lhs."""
+    out_elems = _shape_elems(op.result_type)
+    m = re.search(r"(?:lhs_contracting_dims|rhs_contracting_dims)=\{([0-9,]*)\}",
+                  op.line)
+    # operand shapes: resolve the first two %refs after the opcode
+    refs = re.findall(r"%([\w\.\-]+)", op.line.split(op.opcode + "(", 1)[-1])
+    k = 1
+    if refs:
+        lhs_type = defs.get(refs[0], "")
+        ms = _SHAPE_RE.search(lhs_type)
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        if ms and mc and mc.group(1):
+            dims = [int(d) for d in ms.group(2).split(",") if d]
+            for ci in mc.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
+        # batch dims are already part of out_elems
+    return 2.0 * out_elems * k
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "after-all", "iota",
+}
+
+
+def _dus_root(comps: dict, op: "Op") -> Optional[str]:
+    """If a fusion's root is a dynamic-(update-)slice, HBM traffic is the
+    SLICE, not the full buffer (scan stashes would otherwise count the
+    whole (L, ...) stack per layer). Returns the root opcode or None."""
+    if op.opcode in ("dynamic-update-slice", "dynamic-slice"):
+        return op.opcode
+    if op.opcode != "fusion":
+        return None
+    for sub in _called_computations(op.line):
+        comp = comps.get(sub)
+        if comp is None or not comp.order:
+            continue
+        root = comp.ops.get(comp.order[-1])
+        if root is not None and root.opcode in ("dynamic-update-slice",
+                                                "dynamic-slice"):
+            return root.opcode
+    return None
+
+
+def _collective_link_bytes(op: Op, defs: dict[str, str]) -> float:
+    nbytes = _shape_bytes(op.result_type)
+    g = 1
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+    if m:
+        g = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{\{([^}]*)\}", op.line)
+        if m:
+            g = len(m.group(1).split(","))
+    g = max(g, 1)
+    if op.opcode == "all-reduce":
+        return 2.0 * (g - 1) / g * nbytes
+    if op.opcode == "all-gather":
+        return (g - 1) / g * nbytes            # result is the gathered full
+    if op.opcode == "reduce-scatter":
+        return (g - 1) * nbytes                 # operand = result * g
+    if op.opcode == "all-to-all":
+        return (g - 1) / g * nbytes
+    if op.opcode == "collective-permute":
+        return float(nbytes)
+    return 0.0
+
+
+@dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    link_bytes: float = 0.0
+    kernel_region_bytes: float = 0.0   # traffic inside vmemkernel_* scopes:
+    #   resident in VMEM once the Pallas kernel replaces the XLA reference
+    #   (see kernels/); reported separately so both the XLA-reference and
+    #   the kernel-adjusted memory terms are visible.
+    collective_breakdown: dict = field(default_factory=dict)
+    n_collectives: int = 0
+
+    def add(self, other: "RooflineCounts", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.link_bytes += other.link_bytes * mult
+        self.kernel_region_bytes += other.kernel_region_bytes * mult
+        self.n_collectives += int(other.n_collectives * mult)
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = \
+                self.collective_breakdown.get(k, 0.0) + v * mult
+
+
+def _mult_map(comps: dict) -> tuple[dict, dict]:
+    """(loop multiplier per computation, direct trip count per while-body).
+
+    A computation called from a while body inherits the body's multiplier;
+    the body itself gets parent_mult × trips."""
+    entry = comps["__entry__"]
+    mult: dict[str, float] = {entry.name: 1.0}
+    direct: dict[str, int] = {}
+    frontier = [entry.name]
+    seen: set[str] = set()
+    while frontier:
+        cname = frontier.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                body, cond = _while_parts(op.line)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    mult[body] = max(mult.get(body, 0.0), m * trips)
+                    direct[body] = trips
+                    frontier.append(body)
+            else:
+                for sub in _called_computations(op.line):
+                    mult[sub] = max(mult.get(sub, 0.0), m)
+                    if cname in direct:
+                        # calls from inside a loop body keep its trip for
+                        # the sliced-operand heuristic
+                        direct.setdefault(sub, direct[cname])
+                    frontier.append(sub)
+    return mult, direct
+
+
+def analyze_hlo(text: str) -> RooflineCounts:
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    defs: dict[str, str] = {}
+    fusion_of: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops.values():
+            defs[op.name] = op.result_type
+    mult, direct = _mult_map(comps)
+
+    def _lead_dim(type_str: str) -> int:
+        m = re.match(r"[a-z0-9]+\[(\d+)", type_str)
+        return int(m.group(1)) if m else 1
+
+    total = RooflineCounts()
+    counted_fusion_flops: set[tuple[str, str]] = set()
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname)
+        if m is None:
+            continue  # unreachable computation
+        trip_here = direct.get(cname, 0)
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                continue
+            if op.opcode in ("dot", "convolution"):
+                total.flops += _dot_flops(op, defs) * m
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                lb = _collective_link_bytes(op, defs) * m
+                total.link_bytes += lb
+                total.n_collectives += int(m)
+                total.collective_breakdown[base] = \
+                    total.collective_breakdown.get(base, 0.0) + lb
+            # HBM traffic: only at top level (fusion internals are virtual).
+            # Heuristic: a computation reached via calls= from a fusion is
+            # internal — detected by name prefix "fused_" / "wrapped_" /
+            # region-style names don't matter since we count every
+            # computation once with its multiplier; to avoid double count,
+            # only ops in NON-fusion-internal computations contribute.
+            if comp.name.startswith(("fused_", "wrapped_")):
+                continue
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            dus = _dus_root(comps, op)
+            rb = _shape_bytes(op.result_type)
+            if dus == "dynamic-update-slice":
+                traffic = 3.0 * rb / max(1, _lead_dim(op.result_type))
+            elif dus == "dynamic-slice":
+                traffic = 2.0 * rb
+            else:
+                ob = 0.0
+                tail = op.line.split(op.opcode + "(", 1)[-1].split(")", 1)[0]
+                for ref in re.findall(r"%([\w\.\-]+)", tail):
+                    t = defs.get(ref, "")
+                    b = _shape_bytes(t)
+                    # sliced-stack heuristic: inside a trip-T loop body, an
+                    # operand stacked with leading dim T is read one slice
+                    # per iteration
+                    if trip_here > 1 and _lead_dim(t) == trip_here:
+                        b = b / trip_here
+                    ob += b
+                traffic = rb + ob
+            if "vmemkernel_" in op.line:
+                total.kernel_region_bytes += traffic * m
+            else:
+                total.hbm_bytes += traffic * m
+    return total
+
+
+def collective_inventory(text: str, top: int = 20) -> list[dict]:
+    """Profile tool for §Perf: every collective with its loop-multiplied
+    per-device link bytes, sorted by total contribution. The op_name
+    metadata says which jax-level op generated it."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    defs: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops.values():
+            defs[op.name] = op.result_type
+
+    # compute loop multiplier per computation via BFS from entry
+    mult: dict[str, float] = {entry.name: 1.0}
+    frontier = [entry.name]
+    seen = set()
+    while frontier:
+        cname = frontier.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                body, cond = _while_parts(op.line)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    mult[body] = max(mult.get(body, 0.0), m * trips)
+                    frontier.append(body)
+            else:
+                for sub in _called_computations(op.line):
+                    mult[sub] = max(mult.get(sub, 0.0), m)
+                    frontier.append(sub)
+
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for op in comp.ops.values():
+            base = op.opcode.replace("-start", "")
+            if base not in _COLLECTIVES:
+                continue
+            lb = _collective_link_bytes(op, defs)
+            meta = re.search(r'op_name="([^"]+)"', op.line)
+            rows.append({
+                "op": base,
+                "shape": op.result_type.split("{")[0][:48],
+                "trips": m,
+                "link_bytes_total": lb * m,
+                "source": (meta.group(1)[-110:] if meta else ""),
+            })
+    rows.sort(key=lambda r: -r["link_bytes_total"])
+    return rows[:top]
+
+
+def hbm_inventory(text: str, top: int = 20) -> list[dict]:
+    """Top HBM-traffic ops (loop-multiplied), for the memory-bound cells."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    defs: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops.values():
+            defs[op.name] = op.result_type
+    mult: dict[str, float] = {entry.name: 1.0}
+    frontier = [entry.name]
+    seen = set()
+    while frontier:
+        cname = frontier.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                body, cond = _while_parts(op.line)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    mult[body] = max(mult.get(body, 0.0), m * trips)
+                    frontier.append(body)
+
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for op in comp.ops.values():
+            if op.opcode in _SKIP_BYTES_OPS or op.opcode == "while":
+                continue
+            dus = _dus_root(comps, op)
+            rb = _shape_bytes(op.result_type)
+            if dus is not None:
+                m_lead = re.match(r"[a-z0-9]+\[(\d+)", op.result_type)
+                lead = int(m_lead.group(1)) if m_lead else 1
+                per = 3.0 * rb / max(1, lead) \
+                    if dus == "dynamic-update-slice" else 2.0 * rb
+                total = per * m
+            else:
+                tail = op.line.split(op.opcode + "(", 1)[-1].split(")", 1)[0]
+                ob = sum(_shape_bytes(defs.get(r, ""))
+                         for r in re.findall(r"%([\w\.\-]+)", tail))
+                total = (rb + ob) * m
+            if total < 1e6:
+                continue
+            meta = re.search(r'op_name="([^"]+)"', op.line)
+            rows.append({
+                "opcode": op.opcode,
+                "shape": op.result_type.split("{")[0][:48],
+                "trips": m,
+                "hbm_bytes_total": total,
+                "kernel_region": "vmemkernel_" in op.line,
+                "source": (meta.group(1)[-110:] if meta else ""),
+            })
+    rows.sort(key=lambda r: -r["hbm_bytes_total"])
+    return rows[:top]
+
+
+def roofline_terms(counts: RooflineCounts, *, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> dict:
+    """Two memory terms are reported:
+    * ``memory_ref_s`` — XLA reference lowering (kernel-region traffic,
+      e.g. attention scores, hits HBM);
+    * ``memory_s`` — with the Pallas kernels (kernel regions VMEM-resident;
+      boundary IO is still counted at the producers outside the region).
+    The dominant term / bound use the kernel-adjusted value (the TPU
+    target ships the kernels)."""
+    compute = counts.flops / peak_flops
+    memory = counts.hbm_bytes / hbm_bw
+    memory_ref = (counts.hbm_bytes + counts.kernel_region_bytes) / hbm_bw
+    collective = counts.link_bytes / ici_bw
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda t: t[1])[0]
+    total = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "memory_ref_s": memory_ref,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": total,
+    }

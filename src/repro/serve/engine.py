@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode over a request batch, with
+the KV-cache pytree managed per step and serving metadata (model version
+= latest committed checkpoint) read from the coordinator with leased
+zero-roundtrip reads."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import decode_step, init_decode_cache, prefill
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    """Single-host batched engine (the multi-pod serve path is lowered by
+    launch/dryrun.py with the production mesh; this class drives real
+    arrays for the examples/tests)."""
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig =
+                 ServeConfig(), registry=None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.registry = registry
+        self.model_version: Optional[dict] = None
+        if registry is not None:
+            # leased read: which checkpoint should we be serving?
+            self.model_version = registry.latest_checkpoint()
+        self._decode = jax.jit(partial(decode_step, cfg=self.cfg))
+
+    def generate(self, tokens: jax.Array,
+                 max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """tokens: (B, S) prompt batch -> (B, new) generated ids."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        n_new = max_new_tokens or self.scfg.max_new_tokens
+        logits, caches, pos = prefill(self.params, cfg, {"tokens": tokens})
+        # grow KV caches to hold the generated tokens
+        if not cfg.attn_free:
+            def grow(c):
+                if c.ndim == 5:   # (L, B, S, Hkv, hd)
+                    pad = [(0, 0)] * 5
+                    pad[2] = (0, n_new)
+                    return jnp.pad(c, pad)
+                return c
+            caches = jax.tree.map(grow, caches)
+        out = []
+        key = jax.random.PRNGKey(self.scfg.seed)
+        tok = self._sample(logits, key)
+        out.append(tok)
+        for i in range(n_new - 1):
+            logits, caches = decode_step(self.params, cfg, tok, caches,
+                                         pos + i)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,86 @@
+"""Activation-sharding context: lets model code place logical constraints
+(batch→dp, feature→tp) without knowing the mesh.
+
+§Perf iteration 1 (see EXPERIMENTS.md): without these constraints GSPMD
+resolves ``x[batch@dp] @ w[in@dp, out@tp]`` by UN-sharding the batch and
+all-reducing full-microbatch f32 partials (observed: 1.5-20 TB of
+all-reduce per step). Constraining projection outputs to
+``P(dp, None, tp)`` forces the cheap resolution: weights are all-gathered
+over dp (the FSDP gather), activations stay batch-sharded, and the only
+activation collectives left are the canonical Megatron-style TP
+all-reduces.
+
+The context is process-global (set by the launcher/dry-run before
+tracing); when unset every constraint is a no-op, so CPU unit tests and
+single-device runs are unaffected.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP: Optional[Union[str, tuple]] = None
+_TP: Optional[str] = None
+_SP: bool = False    # Megatron-style sequence parallelism (§Perf iter 3):
+#                      residual stream sharded over 'model' on the seq dim
+#                      between blocks; TP all-reduces become RS+AG pairs
+#                      (half the link bytes) and norms/elementwise shard 16x.
+
+
+def set_axes(dp, tp, sp: bool = False) -> None:
+    global _DP, _TP, _SP
+    _DP, _TP, _SP = dp, tp, sp
+
+
+def clear() -> None:
+    set_axes(None, None, False)
+
+
+def sp_enabled() -> bool:
+    return _SP and _TP is not None
+
+
+_MOE_GROUPS: int = 1
+
+
+def set_moe_groups(n: int) -> None:
+    """Number of dispatch groups for group-local MoE (usually the dp
+    extent; 1 = flat dispatch)."""
+    global _MOE_GROUPS
+    _MOE_GROUPS = max(1, n)
+
+
+def moe_groups() -> int:
+    return _MOE_GROUPS
+
+
+def axes_from_mesh(mesh) -> tuple:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in mesh.axis_names else None
+    return dp, tp
+
+
+def constrain(x: jax.Array, *roles: Optional[str]) -> jax.Array:
+    """roles: one of 'dp' | 'tp' | None per dim (trailing dims may be
+    omitted). No-op when no mesh context is set."""
+    if _DP is None and _TP is None:
+        return x
+    spec = []
+    for i in range(x.ndim):
+        role = roles[i] if i < len(roles) else None
+        if role == "dp":
+            spec.append(_DP)
+        elif role == "tp":
+            spec.append(_TP)
+        elif role == "sp":
+            spec.append(_TP if _SP else None)
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x  # dim not divisible / no mesh: leave unconstrained

@@ -1,0 +1,174 @@
+"""Optimizers: AdamW (fp32 states) and Adafactor (factored second moment,
+for archs whose Adam states exceed per-device HBM), with global-norm
+clipping, warmup+cosine LR, and an optional int8 gradient-compression
+stage with error feedback (the distributed-optimization trick: on real
+pods the quantized tensor is what crosses the DP axis; here the
+quantize/dequantize + error-feedback dynamics are exact)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress: str = "none"           # none | int8_ef
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ------------------------------------------------------------ compression
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads_int8_ef(grads, ef):
+    """Quantize each leaf to int8 with error feedback. Returns
+    (dequantized grads, new error buffers)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+    out = jax.tree.map(one, grads, ef)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_ef
+
+
+# ------------------------------------------------------------------ adamw
+def adamw_init(params, cfg: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {"m": jax.tree.map(zeros, params),
+             "v": jax.tree.map(zeros, params)}
+    if cfg.compress == "int8_ef":
+        state["ef"] = jax.tree.map(zeros, params)
+    return state
+
+
+def adamw_update(grads, state, params, cfg: OptConfig, step):
+    if cfg.compress == "int8_ef":
+        grads, state["ef"] = compress_grads_int8_ef(grads, state["ef"])
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** (step + 1.0)
+    bc2 = 1 - b2 ** (step + 1.0)
+
+    def one(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    out = jax.tree.map(one, grads, state["m"], state["v"], params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    new_state = dict(state)
+    new_state["m"], new_state["v"] = pick(0), pick(1)
+    return pick(2), new_state
+
+
+# -------------------------------------------------------------- adafactor
+def adafactor_init(params, cfg: OptConfig):
+    def one(p):
+        if p.ndim >= 2:
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    state = {"f": jax.tree.map(one, params,
+                               is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+    if cfg.compress == "int8_ef":
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)
+    return state
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig, step):
+    if cfg.compress == "int8_ef":
+        grads, state["ef"] = compress_grads_int8_ef(grads, state["ef"])
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step + 1.0) ** -0.8
+
+    def one(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            row = decay * f["row"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            col = decay * f["col"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(row[..., None] * col[..., None, :]
+                             / (jnp.mean(row, axis=-1, keepdims=True)[..., None]
+                                + 1e-30)) + 1e-30
+            upd = g / denom
+            nf = {"row": row, "col": col}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            upd = g / (jnp.sqrt(v) + 1e-30)
+            nf = {"v": v}
+        # update clipping (Adafactor RMS trick)
+        rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return nf, (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    is_f = lambda x: isinstance(x, dict) and ("row" in x or "v" in x)
+    out = jax.tree.map(one, grads, state["f"], params,
+                       is_leaf=lambda x: is_f(x))
+    # out mirrors params-structure with (nf, new_p) tuples at leaves
+    new_f = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_p = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = dict(state)
+    new_state["f"] = new_f
+    return new_p, new_state
+
+
+# ------------------------------------------------------------------ public
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    return adamw_init(params, cfg)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(grads, opt_state, params, cfg: OptConfig, step):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(grads, opt_state, params, cfg, step)
+    else:
+        new_p, new_s = adamw_update(grads, opt_state, params, cfg, step)
+    return new_p, new_s, gnorm

@@ -1,0 +1,70 @@
+"""Training step: microbatched gradient accumulation, clipping, optimizer
+update. Pure function of (state, batch) — jit/pjit-able with shardings."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import forward_train, init_params
+from .optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def init_train_state(key: jax.Array, cfg: ArchConfig,
+                     opt_cfg: OptConfig) -> dict:
+    params = init_params(key, cfg)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def reshape(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(reshape, batch)
+
+
+def train_step(state: dict, batch: dict, cfg: ArchConfig,
+               opt_cfg: OptConfig) -> tuple[dict, dict]:
+    """One optimizer step over a global batch (with grad accumulation)."""
+    params = state["params"]
+    accum = max(1, cfg.grad_accum)
+
+    loss_fn = lambda p, mb: forward_train(p, cfg, mb)
+
+    if accum == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    else:
+        micro = _split_microbatches(batch, accum)
+
+        def acc_fn(carry, mb):
+            loss_sum, grads = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            grads = jax.tree.map(jnp.add, grads, g)
+            return (loss_sum + l, grads), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            acc_fn, (jnp.zeros((), jnp.float32), zero_grads), micro)
+        loss = loss_sum / accum
+        grads = jax.tree.map(lambda g: g / accum, grads)
+
+    new_params, new_opt, gnorm = apply_updates(
+        grads, state["opt"], params, opt_cfg, state["step"])
+    new_state = {"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}
+    metrics = {"loss": loss, "grad_norm": gnorm}
+    return new_state, metrics
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig):
+    return partial(train_step, cfg=cfg, opt_cfg=opt_cfg)

@@ -1,0 +1,68 @@
+"""Bounded-uncertainty clock invariants (paper §2.2, §4.3)."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.clock import BoundedClock, TimeInterval
+from repro.core.prob import PRNG
+from repro.core.simulate import EventLoop
+
+
+def make_clock(max_error=50e-6, seed=0):
+    loop = EventLoop()
+    return loop, BoundedClock(loop, PRNG(seed), max_error)
+
+
+@given(st.integers(0, 10_000), st.floats(1e-7, 1e-3))
+@settings(max_examples=200, deadline=None)
+def test_interval_contains_true_time(seed, max_error):
+    loop, clock = make_clock(max_error, seed)
+    loop.now = 123.456
+    iv = clock.interval_now()
+    assert iv.earliest <= loop.now <= iv.latest
+    assert iv.latest - iv.earliest <= 2 * max_error + 1e-12
+
+
+@given(st.integers(0, 2_000), st.floats(0.0, 2.0), st.floats(1e-6, 1e-2))
+@settings(max_examples=300, deadline=None)
+def test_commit_and_read_gates_are_disjoint(seed, age, max_error):
+    """At any true moment, 'provably expired' and 'lease valid' never both
+    hold — the Case-2 proof obligation (paper §4.2/§4.3)."""
+    loop, clock = make_clock(max_error, seed)
+    delta = 1.0
+    # an entry stamped at true time 10.0 with its own (different) clock
+    loop.now = 10.0
+    stamp_clock = BoundedClock(loop, PRNG(seed + 1), max_error)
+    t1 = stamp_clock.interval_now()
+    loop.now = 10.0 + age
+    definitely_old = clock.definitely_older_than(t1, delta)
+    valid = clock.lease_valid(t1, delta)
+    assert not (definitely_old and valid)
+    # and far from the boundary both are decisive
+    if age > delta + 4 * max_error:
+        assert definitely_old and not valid
+    if age < delta - 4 * max_error:
+        assert valid and not definitely_old
+
+
+def test_gate_boundary_behavior():
+    loop, clock = make_clock(max_error=1e-4)
+    loop.now = 0.0
+    t1 = TimeInterval(0.0, 0.0)
+    delta = 1.0
+    loop.now = 0.5
+    assert clock.lease_valid(t1, delta)
+    assert not clock.definitely_older_than(t1, delta)
+    loop.now = 2.0
+    assert not clock.lease_valid(t1, delta)
+    assert clock.definitely_older_than(t1, delta)
+
+
+def test_faulty_clock_breaks_the_guarantee():
+    """§4.3: if true time is outside the claimed interval, the disjointness
+    argument collapses — this is what the fault injection models."""
+    loop = EventLoop()
+    clock = BoundedClock(loop, PRNG(0), 1e-6, faulty=True, fault_skew=-5.0)
+    loop.now = 10.0
+    iv = clock.interval_now()
+    assert not (iv.earliest <= loop.now <= iv.latest)

@@ -1,0 +1,33 @@
+"""Elastic scaling of the coordinator through the public API."""
+
+from repro.coord.kvstore import LocalCoordinator
+
+
+def test_coordinator_scale_up_down():
+    coord = LocalCoordinator()
+    coord.append("k", 1)
+    new_id = coord.scale_up()
+    assert coord.read_latest("k") == 1
+    coord.append("k", 2)
+    ldr = coord._leader()
+    assert new_id in ldr.config and len(ldr.config) == 4
+    # scale back down (pick a non-leader member)
+    victim = next(i for i in ldr.config if i not in (ldr.id,))
+    coord.scale_down(victim)
+    assert len(coord._leader().config) == 3
+    assert coord.read_latest("k") == 2
+
+
+def test_scaled_up_cluster_tolerates_extra_failure():
+    coord = LocalCoordinator()
+    coord.append("k", 1)
+    coord.scale_up()
+    coord.scale_up()                       # now 5 nodes: tolerates 2 faults
+    ldr = coord._leader()
+    assert len(ldr.config) == 5
+    followers = [n for n in coord.cluster.nodes.values()
+                 if n.alive and n is not ldr][:2]
+    for f in followers:
+        f.crash()
+    coord.append("k", 2)
+    assert coord.read_latest("k") == 2

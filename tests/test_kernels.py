@@ -1,0 +1,204 @@
+"""Pallas kernel allclose tests: interpret-mode kernel vs pure-jnp oracle,
+swept over shapes/dtypes (GQA ratios, ragged sequence vs block, sliding
+windows, chunk sizes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rwkv6 import wkv6_chunked
+
+
+def rand(key, shape, dtype, scale=0.5):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+FA_CASES = [
+    # (BH, BHkv, S, hd, window, block_q, block_k, dtype)
+    (4, 4, 128, 64, None, 64, 64, jnp.float32),      # MHA
+    (8, 2, 256, 64, None, 64, 64, jnp.float32),      # GQA 4x
+    (6, 2, 192, 32, None, 64, 64, jnp.float32),      # ragged: S % block != 0
+    (4, 4, 256, 64, 64, 64, 64, jnp.float32),        # sliding window
+    (4, 2, 256, 128, None, 128, 128, jnp.float32),   # MXU-aligned hd
+    (4, 4, 128, 64, None, 32, 128, jnp.float32),     # bq != bk
+    (4, 2, 128, 64, None, 64, 64, jnp.bfloat16),     # bf16 io
+    (2, 1, 512, 64, 128, 128, 64, jnp.bfloat16),     # window + bf16
+]
+
+
+@pytest.mark.parametrize("bh,bhkv,s,hd,window,bq,bk,dtype", FA_CASES)
+def test_flash_attention_matches_oracle(bh, bhkv, s, hd, window, bq, bk,
+                                        dtype):
+    key = jax.random.PRNGKey(hash((bh, s, hd)) % 2**31)
+    q = rand(key, (bh, s, hd), dtype)
+    k = rand(jax.random.fold_in(key, 1), (bhkv, s, hd), dtype)
+    v = rand(jax.random.fold_in(key, 2), (bhkv, s, hd), dtype, scale=1.0)
+    out = flash_attention_fwd(q, k, v, window=window, block_q=bq,
+                              block_k=bk, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_attention_first_row_is_v0():
+    """Causal: position 0 attends only to itself."""
+    q = rand(jax.random.PRNGKey(0), (2, 64, 32), jnp.float32)
+    k = rand(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    v = rand(jax.random.PRNGKey(2), (2, 64, 32), jnp.float32)
+    out = flash_attention_fwd(q, k, v, block_q=32, block_k=32,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]),
+                               atol=1e-5)
+
+
+WKV_CASES = [
+    # (BH, S, hd, chunk)
+    (4, 64, 16, 16),
+    (2, 128, 32, 32),
+    (8, 128, 64, 64),
+    (3, 96, 16, 32),      # S % chunk != 0 handled by chunk=min → 32|96
+    (2, 256, 64, 128),
+]
+
+
+@pytest.mark.parametrize("bh,s,hd,chunk", WKV_CASES)
+def test_wkv6_matches_oracle(bh, s, hd, chunk):
+    key = jax.random.PRNGKey(hash((bh, s, hd)) % 2**31)
+    r = rand(key, (bh, s, hd), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (bh, s, hd), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (bh, s, hd), jnp.float32)
+    # decay in (0, 1) like exp(-exp(w))
+    w = jax.nn.sigmoid(rand(jax.random.fold_in(key, 3), (bh, s, hd),
+                            jnp.float32, scale=2.0)) * 0.98
+    u = rand(jax.random.fold_in(key, 4), (bh, hd), jnp.float32)
+    out = wkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=True)
+    expect = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_wkv6_state_carries_across_chunks():
+    """A signal planted in chunk 0 must influence outputs in chunk 2+."""
+    bh, s, hd = 1, 96, 16
+    r = jnp.ones((bh, s, hd), jnp.float32) * 0.1
+    k = jnp.zeros((bh, s, hd), jnp.float32).at[0, 0].set(1.0)
+    v = jnp.zeros((bh, s, hd), jnp.float32).at[0, 0].set(1.0)
+    w = jnp.full((bh, s, hd), 0.99, jnp.float32)
+    u = jnp.zeros((bh, hd), jnp.float32)
+    out = wkv6_chunked(r, k, v, w, u, chunk=32, interpret=True)
+    assert float(jnp.abs(out[0, 80]).max()) > 1e-4, \
+        "state did not propagate across chunk boundaries"
+    expect = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5)
+
+
+def test_model_wkv_scan_matches_kernel():
+    """The in-model chunked time scan (ssm.py) and the Pallas kernel
+    implement the same recurrence."""
+    from repro.models.ssm import wkv_step, chunked_time_scan
+    bh, s, hd = 2, 64, 16
+    h = 2  # heads per batch entry in the model layout
+    b = bh // h
+    key = jax.random.PRNGKey(3)
+    r = rand(key, (bh, s, hd), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (bh, s, hd), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (bh, s, hd), jnp.float32)
+    w = jax.nn.sigmoid(rand(jax.random.fold_in(key, 3), (bh, s, hd),
+                            jnp.float32)) * 0.98
+    u = rand(jax.random.fold_in(key, 4), (h, hd), jnp.float32)
+
+    # model layout: (S, B, H, hd) scanned
+    rm = r.reshape(b, h, s, hd).transpose(2, 0, 1, 3)
+    km = k.reshape(b, h, s, hd).transpose(2, 0, 1, 3)
+    vm = v.reshape(b, h, s, hd).transpose(2, 0, 1, 3)
+    wm = w.reshape(b, h, s, hd).transpose(2, 0, 1, 3)
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = chunked_time_scan(lambda st, x: wkv_step(st, x, u), state0,
+                              (rm, km, vm, wm), chunk=16)
+    model_out = ys.transpose(1, 2, 0, 3).reshape(bh, s, hd)
+
+    u_k = jnp.tile(u, (b, 1))
+    kern_out = wkv6_chunked(r, k, v, w, u_k, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern_out),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------ flash decode
+from repro.kernels.decode_attention import flash_decode
+from repro.models.layers import decode_attention_ref
+
+
+DECODE_CASES = [
+    # (B, Hkv, grp, S, hd, block_s, dtype)
+    (2, 2, 4, 256, 64, 64, jnp.float32),      # GQA 4x
+    (1, 4, 1, 512, 128, 128, jnp.float32),    # MHA-per-kv, MXU-aligned
+    (2, 2, 8, 384, 64, 128, jnp.float32),     # ragged S vs block
+    (2, 2, 4, 256, 64, 64, jnp.bfloat16),     # bf16 io
+]
+
+
+@pytest.mark.parametrize("b,hkv,grp,s,hd,bs,dtype", DECODE_CASES)
+def test_flash_decode_matches_oracle(b, hkv, grp, s, hd, bs, dtype):
+    key = jax.random.PRNGKey(hash((b, s, hd)) % 2**31)
+    h = hkv * grp
+    q = rand(key, (b, 1, h, hd), dtype)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, hkv, hd), dtype)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, hkv, hd), dtype, 1.0)
+    cache_len = jnp.array([s // 2, s][:b] if b > 1 else [s // 2],
+                          jnp.int32)[:b]
+    expect = decode_attention_ref(q, kc, vc, cache_len)   # (B,1,H,hd)
+
+    # kernel layout: fold (B, Hkv) and group queries on their kv head
+    qg = q[:, 0].reshape(b, hkv, grp, hd).reshape(b * hkv, grp, hd)
+    kk = kc.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vv = vc.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    lens = jnp.repeat(cache_len, hkv)
+    out = flash_decode(qg, kk, vv, lens, block_s=bs, interpret=True)
+    out = out.reshape(b, hkv, grp, hd).reshape(b, 1, h, hd)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_decode_respects_cache_len():
+    """Slots beyond cache_len must not influence the output."""
+    b, s, hd = 1, 128, 32
+    q = rand(jax.random.PRNGKey(0), (b, 4, hd), jnp.float32)
+    k = rand(jax.random.PRNGKey(1), (b, s, hd), jnp.float32)
+    v = rand(jax.random.PRNGKey(2), (b, s, hd), jnp.float32)
+    out1 = flash_decode(q, k, v, jnp.array([64]), block_s=64,
+                        interpret=True)
+    # poison the masked region: result must be identical
+    k2 = k.at[:, 64:].set(99.0)
+    v2 = v.at[:, 64:].set(-99.0)
+    out2 = flash_decode(q, k2, v2, jnp.array([64]), block_s=64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-6)
+
+
+def test_ops_dispatch_reference_vs_interpret():
+    """The jit'd dispatch wrappers agree across impls."""
+    from repro.kernels.ops import decode_attention, flash_attention, wkv6
+    key = jax.random.PRNGKey(9)
+    q = rand(key, (4, 2, 32), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (4, 64, 32), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (4, 64, 32), jnp.float32)
+    lens = jnp.array([64, 32, 64, 16], jnp.int32)
+    a = decode_attention(q, k, v, lens, impl="reference")
+    b = decode_attention(q, k, v, lens, impl="pallas_interpret", block_s=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    qf = rand(key, (4, 128, 32), jnp.float32)
+    a = flash_attention(qf, k, v, impl="reference")
+    b = flash_attention(qf, k, v, impl="pallas_interpret", block_q=64,
+                        block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=1e-4)

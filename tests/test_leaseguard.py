@@ -1,0 +1,256 @@
+"""LeaseGuard protocol behaviour (paper §3, §5): commit gate, deferred
+commit writes, inherited lease reads, limbo region, lease upkeep,
+Ongaro-lease and quorum-read baselines, and the key stale-read safety
+property."""
+
+import pytest
+
+from repro.core import RaftParams, ReadMode, SimParams, build_cluster
+
+DELTA = 2.0
+
+
+def make(**kw):
+    raft_kw = dict(lease_duration=DELTA, election_timeout=0.5)
+    raft_kw.update(kw)
+    return build_cluster(RaftParams(**raft_kw), SimParams())
+
+
+def settle(c, dt):
+    c.loop.run_until(c.loop.now + dt)
+
+
+def write(c, node, key, value):
+    return c.loop.run_until_complete(
+        c.loop.create_task(node.client_write(key, value)))
+
+
+def read(c, node, key):
+    return c.loop.run_until_complete(
+        c.loop.create_task(node.client_read(key)))
+
+
+def fail_leader(c):
+    """Crash the leader; return (old_leader, new_leader, crash_time)."""
+    ldr = c.wait_for_leader()
+    t = c.loop.now
+    ldr.crash()
+    deadline = t + 5.0
+    while c.loop.now < deadline:
+        settle(c, 0.05)
+        for n in c.nodes.values():
+            if n.is_leader() and n is not ldr:
+                return ldr, n, t
+    raise RuntimeError("no new leader")
+
+
+# ------------------------------------------------------------- commit gate
+def test_commit_gate_blocks_then_opens():
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    last_entry_time = c.loop.now
+    old, new, t_crash = fail_leader(c)
+    # inside the old lease window: the new leader must not commit
+    assert c.loop.now < last_entry_time + DELTA
+    assert new._commit_gate_blocked()
+    ci_before = new.commit_index
+    settle(c, 0.2)
+    assert new.commit_index == ci_before
+    # after Δ the gate opens and the no-op commits
+    c.loop.run_until(last_entry_time + DELTA + 0.3)
+    assert not new._commit_gate_blocked()
+    assert new.commit_index > ci_before
+    assert new.log[new.commit_index].term == new.term
+
+
+def test_deferred_commit_write_acked_after_gate_opens():
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    t_last = c.loop.now
+    old, new, _ = fail_leader(c)
+    assert new._commit_gate_blocked()
+    t0 = c.loop.now
+    res = write(c, new, "y", 2)     # accepted now, acked at lease expiry
+    assert res.ok
+    assert c.loop.now >= t_last + DELTA - 2 * new.clock.max_error - 0.01
+    settle(c, 0.5)
+    for n in c.nodes.values():
+        if n.alive:
+            assert n.data.get("y") == [2]
+
+
+def test_unoptimized_log_lease_refuses_writes_during_old_lease():
+    c = make(defer_commit_writes=False, inherited_lease_reads=False)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    t_last = c.loop.now
+    old, new, _ = fail_leader(c)
+    if c.loop.now < t_last + DELTA - 0.3:   # still inside the lease window
+        res = write(c, new, "y", 2)
+        assert not res.ok and res.error == "no_lease"
+        res = read(c, new, "x")
+        assert not res.ok and res.error == "no_lease"
+    # after expiry everything flows again
+    c.loop.run_until(t_last + DELTA + 0.5)
+    assert write(c, new, "y", 3).ok
+    assert read(c, new, "y").value == [3]
+
+
+# ---------------------------------------------------- inherited lease reads
+def test_inherited_lease_reads_and_limbo_region():
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "safe", 1).ok
+    assert write(c, ldr, "safe", 2).ok
+    settle(c, 0.3)   # followers learn commitIndex covering "safe"
+    ldr.freeze_commits()
+    for v in (10, 11, 12):
+        assert write(c, ldr, "limbo_key", v).ok   # committed, acked, hidden
+    t_last = c.loop.now
+    old, new, _ = fail_leader(c)
+    assert c.loop.now < t_last + DELTA, "election must finish inside lease"
+    assert new._commit_gate_blocked()
+    assert "limbo_key" in new.limbo_keys
+    # unaffected key: consistent read with zero communication
+    res = read(c, new, "safe")
+    assert res.ok and res.value == [1, 2]
+    # affected key: rejected (returning [] or [10,11] would be stale/ahead)
+    res = read(c, new, "limbo_key")
+    assert not res.ok and res.error == "limbo"
+    # once the gate opens and the no-op commits, limbo clears
+    c.loop.run_until(t_last + DELTA + 0.5)
+    res = read(c, new, "limbo_key")
+    assert res.ok and res.value == [10, 11, 12]   # old leader's acked writes
+
+
+def test_without_inherited_reads_new_leader_rejects_all_reads():
+    c = make(inherited_lease_reads=False)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    t_last = c.loop.now
+    old, new, _ = fail_leader(c)
+    if c.loop.now < t_last + DELTA - 0.3:
+        res = read(c, new, "x")
+        assert not res.ok and res.error == "no_lease"
+
+
+# ------------------------------------------------------------ stale reads
+def test_partitioned_old_leader_loses_lease_and_refuses_reads():
+    """THE safety property: a deposed leader cannot serve stale reads
+    after its lease expires, even though it still thinks it leads."""
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    others = [n for n in c.nodes.values() if n is not ldr]
+    for o in others:
+        c.net.partition(ldr.id, o.id)
+    t_part = c.loop.now
+    settle(c, 2.5)   # new leader elected; old lease expired
+    new = next(n for n in others if n.is_leader())
+    c.loop.run_until(t_part + DELTA + 1.0)
+    assert write(c, new, "x", 2).ok
+    # old leader: still believes it leads, but its newest committed entry is
+    # stale, so the read gate fails — no stale [1] is ever returned.
+    assert ldr.state == "leader"
+    res = read(c, ldr, "x")
+    assert not res.ok and res.error == "no_lease"
+
+
+def test_gray_failure_leader_cannot_keep_lease():
+    """§1: only a leader that can majority-replicate entries keeps a lease.
+    A leader that cannot reach a majority (gray failure) loses it after Δ."""
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    assert read(c, ldr, "x").ok
+    for o in c.nodes.values():
+        if o is not ldr:
+            c.net.partition(ldr.id, o.id)
+    settle(c, DELTA + 4 * ldr.clock.max_error + 0.1)
+    res = read(c, ldr, "x")
+    assert not res.ok and res.error == "no_lease"
+
+
+# ------------------------------------------------------------- lease upkeep
+def test_lease_maintained_by_noops_when_idle():
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    settle(c, 3 * DELTA)   # idle far beyond Δ: maintenance no-ops keep it
+    res = read(c, ldr, "x")
+    assert res.ok and res.value == [1]
+
+
+def test_lease_expires_without_maintenance():
+    c = make(lease_maintenance=False)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    settle(c, DELTA + 0.2)
+    res = read(c, ldr, "x")
+    assert not res.ok and res.error == "no_lease"
+
+
+def test_end_lease_handover_lets_next_leader_commit_immediately():
+    """Planned failover (§5.1): relinquish, crash, next leader skips Δ."""
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    ldr.relinquish_lease()
+    settle(c, 0.3)          # end-lease entry replicates
+    old, new, t_crash = fail_leader(c)
+    assert not new._commit_gate_blocked()
+    res = write(c, new, "y", 2)
+    assert res.ok and c.loop.now < t_crash + 2.0 + DELTA / 2
+
+
+# ------------------------------------------------------------- baselines
+def test_ongaro_lease_serves_reads_and_lapses_when_partitioned():
+    c = make(read_mode=ReadMode.ONGARO_LEASE, election_timeout=0.5)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    settle(c, 0.2)
+    assert read(c, ldr, "x").ok
+    for o in c.nodes.values():
+        if o is not ldr:
+            c.net.partition(ldr.id, o.id)
+    settle(c, 0.6)   # > ET: majority of s_i stale
+    res = read(c, ldr, "x")
+    assert not res.ok and res.error == "no_lease"
+
+
+def test_quorum_read_fails_on_minority_partition():
+    c = make(read_mode=ReadMode.QUORUM)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    assert read(c, ldr, "x").ok
+    for o in c.nodes.values():
+        if o is not ldr:
+            c.net.partition(ldr.id, o.id)
+    res = read(c, ldr, "x")
+    assert not res.ok
+
+
+def test_leaseguard_read_zero_roundtrips():
+    """The headline: consistent reads with zero network messages."""
+    c = make()
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    settle(c, 0.1)
+    sent_before = c.net.messages_sent
+    t0 = c.loop.now
+    res = read(c, ldr, "x")
+    assert res.ok and res.value == [1]
+    assert c.loop.now == t0                      # zero latency
+    assert c.net.messages_sent == sent_before    # zero messages
+
+
+def test_quorum_read_costs_a_roundtrip():
+    c = make(read_mode=ReadMode.QUORUM)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "x", 1).ok
+    t0 = c.loop.now
+    res = read(c, ldr, "x")
+    assert res.ok
+    assert c.loop.now > t0        # at least one network roundtrip

@@ -1,0 +1,134 @@
+"""Vanilla-Raft behaviour: elections, replication, completeness."""
+
+import pytest
+
+from repro.core import (RaftParams, ReadMode, SimParams, build_cluster)
+
+
+def make(raft=None, sim=None, **kw):
+    raft = raft or RaftParams(**kw)
+    sim = sim or SimParams()
+    return build_cluster(raft, sim)
+
+
+def settle(cluster, dt):
+    cluster.loop.run_until(cluster.loop.now + dt)
+
+
+def write(cluster, node, key, value):
+    return cluster.loop.run_until_complete(
+        cluster.loop.create_task(node.client_write(key, value)))
+
+
+def read(cluster, node, key):
+    return cluster.loop.run_until_complete(
+        cluster.loop.create_task(node.client_read(key)))
+
+
+def test_single_leader_elected():
+    c = make()
+    ldr = c.wait_for_leader()
+    settle(c, 1.0)
+    leaders = [n for n in c.nodes.values() if n.is_leader()]
+    assert leaders == [ldr]
+    assert all(n.term == ldr.term for n in c.nodes.values())
+
+
+def test_write_replicates_to_all():
+    c = make()
+    ldr = c.wait_for_leader()
+    res = write(c, ldr, "x", 1)
+    assert res.ok
+    settle(c, 0.5)
+    for n in c.nodes.values():
+        assert n.data.get("x") == [1]
+        assert n.commit_index >= 1
+
+
+def test_write_to_follower_rejected():
+    c = make()
+    ldr = c.wait_for_leader()
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    res = write(c, follower, "x", 1)
+    assert not res.ok and res.error == "not_leader"
+
+
+def test_leader_crash_new_leader_has_committed_entries():
+    """Leader Completeness: committed entries survive failover."""
+    c = make()
+    ldr = c.wait_for_leader()
+    for i in range(5):
+        assert write(c, ldr, f"k{i}", i).ok
+    ldr.crash()
+    settle(c, 2.0)
+    new = next(n for n in c.nodes.values() if n.is_leader())
+    assert new is not ldr
+    for i in range(5):
+        assert f"k{i}" in {e.key for e in new.log}
+    settle(c, 1.5)  # allow gate to open and state machine to catch up
+    for i in range(5):
+        assert new.data.get(f"k{i}") == [i]
+
+
+def test_crashed_node_restarts_and_catches_up():
+    c = make()
+    ldr = c.wait_for_leader()
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    follower.crash()
+    for i in range(5):
+        assert write(c, ldr, "k", i).ok
+    follower.restart()
+    settle(c, 2.0)
+    assert follower.data.get("k") == [0, 1, 2, 3, 4]
+
+
+def test_deposed_leader_steps_down_on_higher_term():
+    c = make()
+    ldr = c.wait_for_leader()
+    others = [n for n in c.nodes.values() if n is not ldr]
+    # isolate the leader; a new one is elected; heal; old must step down
+    for o in others:
+        c.net.partition(ldr.id, o.id)
+    settle(c, 2.0)
+    new = next(n for n in others if n.is_leader())
+    assert new.term > ldr.term
+    c.net.heal()
+    settle(c, 1.0)
+    assert ldr.state == "follower"
+    assert ldr.term == new.term
+
+
+def test_log_matching_after_partition_heal():
+    c = make()
+    ldr = c.wait_for_leader()
+    others = [n for n in c.nodes.values() if n is not ldr]
+    for o in others:
+        c.net.partition(ldr.id, o.id)
+    # divergent suffix on the isolated leader (never commits)
+    c.loop.create_task(ldr.client_write("lost", 99))
+    settle(c, 2.5)
+    new = next(n for n in others if n.is_leader())
+    assert write(c, new, "kept", 1).ok
+    c.net.heal()
+    settle(c, 2.0)
+    # all logs identical, lost write gone everywhere
+    logs = [[(e.term, e.key, e.value) for e in n.log] for n in c.nodes.values()]
+    assert logs[0] == logs[1] == logs[2]
+    assert all("lost" not in n.data for n in c.nodes.values())
+    assert all(n.data.get("kept") == [1] for n in c.nodes.values())
+
+
+def test_five_node_cluster_survives_two_crashes():
+    c = make(n_nodes=5)
+    ldr = c.wait_for_leader()
+    assert write(c, ldr, "a", 1).ok
+    followers = [n for n in c.nodes.values() if n is not ldr]
+    followers[0].crash()
+    followers[1].crash()
+    settle(c, 1.0)
+    assert write(c, ldr, "a", 2).ok
+    settle(c, 1.0)
+    live = [n for n in c.nodes.values() if n.alive]
+    assert len(live) == 3
+    for n in live:
+        assert n.data.get("a") == [1, 2]

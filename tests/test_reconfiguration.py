@@ -1,0 +1,100 @@
+"""Single-node membership changes (paper §4.4): overlapping majorities
+preserve the Raft guarantees LeaseGuard relies on, so reconfiguration
+composes with leases. Elastic scaling for the coordinator."""
+
+import pytest
+
+from repro.core import RaftParams, SimParams, build_cluster
+from repro.core.raft import CONFIG
+
+
+def make(**kw):
+    raft = RaftParams(lease_duration=2.0, election_timeout=0.5, **kw)
+    return build_cluster(raft, SimParams()), raft
+
+
+def settle(c, dt):
+    c.loop.run_until(c.loop.now + dt)
+
+
+def run(c, coro):
+    return c.loop.run_until_complete(c.loop.create_task(coro))
+
+
+def test_add_node_replicates_and_votes():
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    new = c.spawn_node(3, raft)
+    res = run(c, ldr.change_membership({0, 1, 2, 3}))
+    assert res.ok
+    settle(c, 1.0)
+    assert new.config == {0, 1, 2, 3}
+    assert new.data.get("x") == [1]          # caught up from the log
+    assert ldr.majority() == 3               # |{0,1,2,3}| // 2 + 1
+    # the new node counts: with two original followers down, a majority
+    # {leader, new} + one more is needed -> crash ONE follower, still live
+    followers = [n for n in c.nodes.values()
+                 if n is not ldr and n is not new]
+    followers[0].crash()
+    assert run(c, ldr.client_write("x", 2)).ok
+    settle(c, 0.5)
+    assert new.data.get("x") == [1, 2]
+
+
+def test_remove_node_shrinks_majority():
+    c, raft = make(n_nodes=5)
+    ldr = c.wait_for_leader()
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    res = run(c, ldr.change_membership(set(ldr.config) - {victim.id}))
+    assert res.ok
+    settle(c, 0.3)
+    assert ldr.majority() == 3               # 4 nodes -> majority 3
+    victim.crash()                            # removed node dying is a no-op
+    others = [n for n in c.nodes.values()
+              if n.alive and n is not ldr and n.id in ldr.config]
+    others[0].crash()                         # one real failure tolerated
+    assert run(c, ldr.client_write("y", 1)).ok
+
+
+def test_reconfig_rules_enforced():
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    # multi-node change rejected
+    res = run(c, ldr.change_membership({0, 1, 2, 3, 4}))
+    assert not res.ok and res.error == "only_single_node_changes"
+    # removing the leader rejected
+    res = run(c, ldr.change_membership(set(ldr.config) - {ldr.id}))
+    assert not res.ok and res.error == "cannot_remove_leader"
+    # follower can't reconfigure
+    f = next(n for n in c.nodes.values() if n is not ldr)
+    res = run(c, f.change_membership({0, 1}))
+    assert not res.ok and res.error == "not_leader"
+
+
+def test_lease_reads_work_through_reconfig():
+    """The CONFIG entry is an ordinary lease-extending log entry:
+    zero-roundtrip reads keep working across the change."""
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("k", 1)).ok
+    c.spawn_node(3, raft)
+    assert run(c, ldr.change_membership({0, 1, 2, 3})).ok
+    before = c.net.messages_sent
+    res = run(c, ldr.client_read("k"))
+    assert res.ok and res.value == [1]
+    assert c.net.messages_sent == before     # still zero roundtrips
+
+
+def test_reconfig_survives_leader_failover():
+    """Leader Completeness carries the CONFIG entry to the next leader."""
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    c.spawn_node(3, raft)
+    assert run(c, ldr.change_membership({0, 1, 2, 3})).ok
+    settle(c, 0.5)
+    ldr.crash()
+    settle(c, 3.5)                            # election + lease expiry
+    new = next(n for n in c.nodes.values() if n.is_leader())
+    assert new.config == {0, 1, 2, 3}
+    assert run(c, new.client_write("z", 9)).ok

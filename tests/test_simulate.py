@@ -1,0 +1,107 @@
+"""Unit tests for the deterministic event loop / task layer."""
+
+import pytest
+
+from repro.core.simulate import (Condition, Event, EventLoop, Future, Task,
+                                 TimeoutError_, wait_for)
+
+
+def test_callbacks_ordered_by_time_then_fifo():
+    loop = EventLoop()
+    order = []
+    loop.call_later(0.2, lambda: order.append("b"))
+    loop.call_later(0.1, lambda: order.append("a"))
+    loop.call_later(0.2, lambda: order.append("c"))  # same time: FIFO
+    loop.run()
+    assert order == ["a", "b", "c"]
+    assert loop.now == pytest.approx(0.2)
+
+
+def test_task_await_sleep_advances_time():
+    loop = EventLoop()
+
+    async def main():
+        await loop.sleep(1.5)
+        return loop.now
+
+    t = loop.create_task(main())
+    out = loop.run_until_complete(t)
+    assert out == pytest.approx(1.5)
+
+
+def test_nested_tasks_and_futures():
+    loop = EventLoop()
+
+    async def child(x):
+        await loop.sleep(0.1)
+        return x * 2
+
+    async def main():
+        a = loop.create_task(child(3))
+        b = loop.create_task(child(4))
+        return await a + await b
+
+    assert loop.run_until_complete(loop.create_task(main())) == 14
+
+
+def test_wait_for_timeout():
+    loop = EventLoop()
+    never = Future(loop)
+
+    async def main():
+        with pytest.raises(TimeoutError_):
+            await wait_for(never, 0.5)
+        return "done"
+
+    assert loop.run_until_complete(loop.create_task(main())) == "done"
+    assert loop.now == pytest.approx(0.5)
+
+
+def test_exception_propagates_through_await():
+    loop = EventLoop()
+
+    async def boom():
+        await loop.sleep(0.01)
+        raise ValueError("x")
+
+    async def main():
+        with pytest.raises(ValueError):
+            await loop.create_task(boom())
+        return 1
+
+    assert loop.run_until_complete(loop.create_task(main())) == 1
+
+
+def test_event_and_condition():
+    loop = EventLoop()
+    ev = Event(loop)
+    cond = Condition(loop)
+    state = {"n": 0}
+    results = []
+
+    async def waiter():
+        await ev.wait()
+        await cond.wait_until(lambda: state["n"] >= 2)
+        results.append(loop.now)
+
+    loop.create_task(waiter())
+    loop.call_later(0.3, ev.set)
+
+    def bump():
+        state["n"] += 1
+        cond.notify_all()
+
+    loop.call_later(0.5, bump)
+    loop.call_later(0.7, bump)
+    loop.run()
+    assert results == [pytest.approx(0.7)]
+
+
+def test_run_until_does_not_execute_future_events():
+    loop = EventLoop()
+    fired = []
+    loop.call_later(1.0, lambda: fired.append(1))
+    loop.run_until(0.5)
+    assert not fired and loop.now == 0.5
+    loop.run_until(1.5)
+    assert fired == [1]

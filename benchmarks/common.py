@@ -2,20 +2,13 @@
 
 from __future__ import annotations
 
-from repro.core import RaftParams, ReadMode, SimParams, run_workload
+from repro.consistency import benchmark_configs
+from repro.core import RaftParams, SimParams, run_workload
 
-# The six consistency configurations of Figs. 7/9.
-CONFIGS = {
-    "inconsistent": dict(read_mode=ReadMode.INCONSISTENT),
-    "quorum": dict(read_mode=ReadMode.QUORUM),
-    "ongaro_lease": dict(read_mode=ReadMode.ONGARO_LEASE),
-    "log_lease": dict(read_mode=ReadMode.LEASEGUARD,
-                      defer_commit_writes=False, inherited_lease_reads=False),
-    "defer_commit": dict(read_mode=ReadMode.LEASEGUARD,
-                         defer_commit_writes=True, inherited_lease_reads=False),
-    "leaseguard": dict(read_mode=ReadMode.LEASEGUARD,
-                       defer_commit_writes=True, inherited_lease_reads=True),
-}
+# One row per registered consistency policy, plus the paper's LeaseGuard
+# ablation variants (Figs. 7/9) — derived from the policy registry, so a
+# newly registered policy shows up in every figure automatically.
+CONFIGS = benchmark_configs()
 
 
 def crash_leader_at(t: float):

@@ -10,20 +10,17 @@ at all, so throughput tracks the inconsistent configuration.
 
 from __future__ import annotations
 
-from repro.core import RaftParams, ReadMode, SimParams, run_workload
+from repro.consistency import benchmark_configs, split_bench_config
+from repro.core import RaftParams, SimParams, run_workload
 
 
 def run(quick: bool = False) -> list[dict]:
-    mechanisms = {
-        "inconsistent": dict(read_mode=ReadMode.INCONSISTENT),
-        "quorum": dict(read_mode=ReadMode.QUORUM),
-        "ongaro_lease": dict(read_mode=ReadMode.ONGARO_LEASE),
-        "leaseguard": dict(read_mode=ReadMode.LEASEGUARD),
-    }
+    mechanisms = benchmark_configs(variants=False)
     loads = [2000, 10000] if quick else [2000, 5000, 10000, 20000, 40000]
     rows = []
     for ops_per_s in loads:
-        for name, flags in mechanisms.items():
+        for name, config in mechanisms.items():
+            flags, sim_flags = split_bench_config(config)
             raft = RaftParams(election_timeout=1.0, heartbeat_interval=0.1,
                               rpc_timeout=0.5, **flags)
             sim = SimParams(
@@ -32,6 +29,7 @@ def run(quick: bool = False) -> list[dict]:
                 sim_duration=0.6 if quick else 1.5,
                 interarrival=1.0 / ops_per_s,
                 write_fraction=1 / 3,
+                **sim_flags,
             )
             res = run_workload(raft, sim, check=False, settle_time=1.0)
             s = res.summarize()

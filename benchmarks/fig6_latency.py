@@ -11,20 +11,18 @@ means 1–10 ms; open-loop clients, half reads half appends.
 
 from __future__ import annotations
 
-from repro.core import RaftParams, ReadMode, SimParams, run_workload
+from repro.consistency import benchmark_configs, split_bench_config
+from repro.core import RaftParams, SimParams, run_workload
 
 
 def run(quick: bool = False) -> list[dict]:
-    mechanisms = {
-        "inconsistent": dict(read_mode=ReadMode.INCONSISTENT),
-        "quorum": dict(read_mode=ReadMode.QUORUM),
-        "ongaro_lease": dict(read_mode=ReadMode.ONGARO_LEASE),
-        "leaseguard": dict(read_mode=ReadMode.LEASEGUARD),
-    }
+    # one row per registered policy (no ablation variants in this figure)
+    mechanisms = benchmark_configs(variants=False)
     latencies_ms = [1.0, 5.0, 10.0] if quick else [1.0, 2.0, 5.0, 10.0]
     rows = []
     for lat_ms in latencies_ms:
-        for name, flags in mechanisms.items():
+        for name, config in mechanisms.items():
+            flags, sim_flags = split_bench_config(config)
             raft = RaftParams(election_timeout=2.0, heartbeat_interval=0.2,
                               rpc_timeout=1.0, **flags)
             sim = SimParams(
@@ -34,6 +32,7 @@ def run(quick: bool = False) -> list[dict]:
                 sim_duration=2.0 if quick else 5.0,
                 interarrival=0.1 if not quick else 0.05,
                 write_fraction=0.5,
+                **sim_flags,
             )
             res = run_workload(raft, sim, check=not quick, settle_time=3.0)
             s = res.summarize()

@@ -14,6 +14,7 @@ Paper findings reproduced:
 
 from __future__ import annotations
 
+from repro.consistency import split_bench_config
 from repro.core import RaftParams, SimParams, run_workload, throughput_timeline
 
 from .common import CONFIGS, crash_leader_at
@@ -23,13 +24,14 @@ def run(quick: bool = False) -> list[dict]:
     rows = []
     bin_size = 0.1
     duration = 1.6 if quick else 2.5
-    for name, flags in CONFIGS.items():
+    for name, config in CONFIGS.items():
+        flags, sim_flags = split_bench_config(config)
         raft = RaftParams(election_timeout=0.5, election_jitter=0.1,
                           heartbeat_interval=0.05, lease_duration=1.0,
                           **flags)
         sim = SimParams(seed=7, sim_duration=duration,
                         interarrival=1e-3 if quick else 300e-6,
-                        write_fraction=1 / 3)
+                        write_fraction=1 / 3, **sim_flags)
         res = run_workload(raft, sim, fault_script=crash_leader_at(0.5),
                            check=not quick, settle_time=1.5)
         t0 = min(op.start_ts for op in res.history)
@@ -51,9 +53,10 @@ def summarize_post_election_reads(quick: bool = False) -> list[dict]:
     for the old lease to expire (paper: 99% with inherited lease reads)."""
     rows = []
     for name in ("log_lease", "defer_commit", "leaseguard"):
+        flags, _ = split_bench_config(CONFIGS[name])
         raft = RaftParams(election_timeout=0.5, election_jitter=0.1,
                           heartbeat_interval=0.05, lease_duration=1.0,
-                          **CONFIGS[name])
+                          **flags)
         sim = SimParams(seed=7, sim_duration=2.5, interarrival=300e-6,
                         write_fraction=1 / 3)
         elected = {"t": None}

@@ -4,30 +4,57 @@ Builds a 3-node replica set, shows zero-roundtrip linearizable reads,
 then crashes the leader and shows the two availability optimizations:
 deferred-commit writes and inherited-lease reads (paper §3.2/§3.3).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Any policy from the consistency registry can be swapped in — the same
+script then shows what that mechanism does around a failover:
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--policy leaseguard]
+      PYTHONPATH=src python examples/quickstart.py --policy readindex
 """
 
+import argparse
+
+from repro.consistency import benchmark_configs, resolve_read_mode
 from repro.core import RaftParams, SimParams, build_cluster
 
 DELTA = 2.0
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="leaseguard",
+                    choices=sorted(benchmark_configs(variants=False)),
+                    help="consistency policy to demo")
+    args = ap.parse_args()
+    mode = resolve_read_mode(args.policy)
+    leasey = args.policy in ("leaseguard", "follower_read")
+
     cluster = build_cluster(
-        RaftParams(lease_duration=DELTA, election_timeout=0.5),
+        RaftParams(read_mode=mode, lease_duration=DELTA,
+                   election_timeout=0.5),
         SimParams(seed=42))
     loop = cluster.loop
     run = lambda coro: loop.run_until_complete(loop.create_task(coro))
 
     leader = cluster.wait_for_leader()
-    print(f"t={loop.now:.2f}s  leader is node {leader.id}")
+    print(f"t={loop.now:.2f}s  leader is node {leader.id} "
+          f"(policy: {args.policy})")
 
-    # --- normal operation: writes replicate, reads are free ------------
+    # --- normal operation: writes replicate; read cost depends on policy --
     run(leader.client_write("user:42", "alice"))
     msgs_before = cluster.net.messages_sent
     res = run(leader.client_read("user:42"))
     print(f"t={loop.now:.2f}s  read -> {res.value}  "
           f"(network messages used: {cluster.net.messages_sent - msgs_before})")
+
+    if mode.value == "follower_read":
+        follower = next(n for n in cluster.nodes.values() if n is not leader)
+        loop.run_until(loop.now + 0.2)
+        msgs_before = cluster.net.messages_sent
+        res = run(follower.client_read("user:42"))
+        print(f"t={loop.now:.2f}s  follower read on node {follower.id} -> "
+              f"{res.value} (messages: "
+              f"{cluster.net.messages_sent - msgs_before}, one RPC to the "
+              f"leader for a read index)")
 
     # --- leader crash ----------------------------------------------------
     t_crash = loop.now
@@ -38,8 +65,20 @@ def main() -> None:
         loop.run_until(loop.now + 0.05)
         new = next((n for n in cluster.nodes.values()
                     if n.is_leader() and n is not leader), None)
-    print(f"t={loop.now:.2f}s  node {new.id} elected "
-          f"(old lease valid until ~t={t_crash + DELTA:.2f}s)")
+    print(f"t={loop.now:.2f}s  node {new.id} elected"
+          + (f" (old lease valid until ~t={t_crash + DELTA:.2f}s)"
+             if leasey else ""))
+
+    if not leasey:
+        # no inherited lease to navigate: the new leader serves immediately
+        res = run(new.client_read("user:42"))
+        print(f"t={loop.now:.2f}s  post-election read -> ok={res.ok} "
+              f"value={res.value}")
+        res = run(new.client_write("user:42", "bob"))
+        print(f"t={loop.now:.2f}s  post-election write acked ok={res.ok}")
+        res = run(new.client_read("user:42"))
+        print(f"t={loop.now:.2f}s  read -> {res.value}")
+        return
 
     # --- inherited lease read: consistent, instant, zero roundtrips -----
     res = run(new.client_read("user:42"))

@@ -1,0 +1,23 @@
+"""No consistency mechanism: leader-local reads with no lease or barrier.
+
+The paper's lower-bound baseline (§6): reads are as fast as possible and
+as wrong as possible — a deposed leader that has not yet heard of its
+successor happily serves stale data. Useful to bound the cost every real
+mechanism pays.
+"""
+
+from __future__ import annotations
+
+from ..core.raft import ReadResult
+from .base import ConsistencyPolicy
+
+
+class InconsistentPolicy(ConsistencyPolicy):
+    name = "inconsistent"
+
+    async def gate_read(self, key: str) -> ReadResult:
+        n = self.node
+        if not n.is_leader():
+            return ReadResult(False, error="not_leader")
+        return ReadResult(True, list(n.data.get(key, [])),
+                          execution_ts=n.loop.now)

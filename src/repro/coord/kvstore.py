@@ -12,8 +12,9 @@ exposed for tests, examples, and failover drills.
 from __future__ import annotations
 
 import json
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
+from ..consistency import resolve_read_mode
 from ..core import (Cluster, RaftParams, ReadMode, SimParams, build_cluster)
 
 
@@ -23,12 +24,14 @@ class CoordinatorError(RuntimeError):
 
 class LocalCoordinator:
     """Replicated, linearizable KV (append-only lists per key) with
-    LeaseGuard zero-roundtrip reads."""
+    LeaseGuard zero-roundtrip reads by default; any policy from the
+    ``repro.consistency`` registry can be selected by enum or name."""
 
     def __init__(self, n_nodes: int = 3, seed: int = 0,
-                 read_mode: ReadMode = ReadMode.LEASEGUARD,
+                 read_mode: Union[ReadMode, str] = ReadMode.LEASEGUARD,
                  lease_duration: float = 1.0) -> None:
-        raft = RaftParams(n_nodes=n_nodes, read_mode=read_mode,
+        self.read_mode = resolve_read_mode(read_mode)
+        raft = RaftParams(n_nodes=n_nodes, read_mode=self.read_mode,
                           election_timeout=0.5, heartbeat_interval=0.05,
                           lease_duration=lease_duration)
         sim = SimParams(seed=seed)
@@ -125,6 +128,7 @@ class LocalCoordinator:
 
     def stats(self) -> dict:
         return {
+            "consistency": self.read_mode.value,
             "reads": self.reads,
             "read_messages": self.read_messages,
             "messages_total": self.cluster.net.messages_sent,

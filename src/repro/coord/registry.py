@@ -24,8 +24,15 @@ CKPT_KEY = "ckpt/manifest"
 
 
 class ClusterRegistry:
-    def __init__(self, coord: Optional[LocalCoordinator] = None) -> None:
-        self.coord = coord or LocalCoordinator()
+    def __init__(self, coord: Optional[LocalCoordinator] = None,
+                 consistency: Optional[str] = None) -> None:
+        """``consistency`` selects a policy from the ``repro.consistency``
+        registry by name (default: leaseguard). Ignored when ``coord`` is
+        supplied."""
+        if coord is None:
+            coord = (LocalCoordinator() if consistency is None
+                     else LocalCoordinator(read_mode=consistency))
+        self.coord = coord
 
     # -- checkpoints -------------------------------------------------------
     def commit_checkpoint(self, manifest: dict) -> bool:

@@ -114,9 +114,24 @@ class Workload:
         if res.entry is not None:
             self._entry_refs.append((rec, res.entry))
 
+    def _read_target(self) -> Optional[Node]:
+        """Usually the leader; with ``follower_read_fraction`` > 0, a random
+        live non-leader replica (for policies that can serve follower reads).
+        The fraction==0 path makes no PRNG draws, so existing seeds replay
+        identically."""
+        leader = self._leader_node()
+        frac = self.sim.follower_read_fraction
+        if frac <= 0.0 or self.prng.random() >= frac:
+            return leader
+        others = [n for _, n in sorted(self.nodes.items())
+                  if n.alive and n is not leader]
+        if not others:
+            return leader
+        return others[self.prng.randint(0, len(others) - 1)]
+
     async def _one_read(self, key: str) -> None:
         start = self.loop.now
-        node = self._leader_node()
+        node = self._read_target()
         if node is None or not node.alive:
             self.history.append(ClientLogEntry(
                 "Read", start, None, self.loop.now, key, None, False,

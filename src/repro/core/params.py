@@ -8,10 +8,16 @@ from typing import Optional
 
 
 class ReadMode(enum.Enum):
+    """User-facing consistency switch. Each value is resolved to a
+    ConsistencyPolicy class by the registry in ``repro.consistency`` —
+    the value string equals the policy's ``name``."""
+
     INCONSISTENT = "inconsistent"    # local read, no consistency mechanism
     QUORUM = "quorum"                # Raft's default: per-read majority check
     ONGARO_LEASE = "ongaro_lease"    # heartbeat-based lease ([41] §6.4.1)
     LEASEGUARD = "leaseguard"        # this paper: the log is the lease
+    READ_INDEX = "readindex"         # Raft ReadIndex: batched read barrier
+    FOLLOWER_READ = "follower_read"  # leased leader barrier + follower serve
 
 
 @dataclass
@@ -55,3 +61,6 @@ class SimParams:
     n_keys: int = 1000
     zipf_a: float = 0.0                     # 0 = uniform
     value_size: int = 1024
+    # fraction of reads routed to a non-leader replica (only useful with a
+    # policy that can serve them, e.g. ReadMode.FOLLOWER_READ)
+    follower_read_fraction: float = 0.0

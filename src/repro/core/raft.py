@@ -1,23 +1,25 @@
-"""Raft with LeaseGuard (paper §3, Fig. 2) plus three comparison mechanisms.
+"""Pure Raft replication + elections; consistency is a pluggable policy.
 
-One :class:`Node` implements:
+:class:`Node` implements only the replication substrate — log append,
+AppendEntries/RequestVote, commit counting, elections, membership changes.
+Every *consistency* decision (how reads are served, whether commits or
+votes must wait, lease upkeep) is delegated to a
+:class:`repro.consistency.ConsistencyPolicy` selected by
+``RaftParams.read_mode``: LeaseGuard's commit gate and limbo region
+(paper §3, Fig. 2), Ongaro leases ([41] §6.4.1), quorum reads, ReadIndex
+batching, follower reads, and inconsistent reads each live in their own
+module under ``repro.consistency``.
 
-* vanilla Raft replication + elections (unmodified by LeaseGuard, §3);
-* **LeaseGuard**: the log is the lease — entries carry ``intervalNow()`` from
-  the writing leader's bounded-uncertainty clock; the commit gate (Fig. 2
-  CommitEntry) blocks a new leader while any prior-term entry is possibly
-  ``< Δ`` old; reads are local while the newest committed entry is ``< Δ``
-  old, with the limbo-region check for inherited leases (§3.3);
-* **deferred-commit writes** (§3.2): accept/replicate during the old lease,
-  fast-forward commitIndex when it expires;
-* **quorum reads** (Raft's default consistency): per-read majority round;
-* **Ongaro leases** ([41] §6.4.1 as implemented in paper §7.1): leader has a
-  lease iff a majority of its last-successful-AppendEntries start times are
-  ``< ET`` old; followers refuse to vote within ET of hearing from a leader.
+The policy hook points in this file:
 
-Efficiency notes mirror the paper's C++ (§7.1): the commit gate is O(1) via a
-cached ``last_prior_term_index``; the limbo check is O(1) via a key set
-(``setLimboRegion``).
+* ``_handle_vote``         -> ``policy.gate_vote``
+* ``_become_leader``       -> ``policy.on_become_leader`` + ``maintenance_task``
+* ``_replicate`` ack       -> ``policy.on_append_response``
+* ``_try_advance_commit``  -> ``policy.gate_commit`` / ``on_commit_blocked``
+* ``_apply_committed``     -> ``policy.on_commit_advanced``
+* ``client_write``         -> ``policy.gate_write``
+* ``client_read``          -> ``policy.gate_read``
+* unknown RPC types        -> ``policy.on_message``
 """
 
 from __future__ import annotations
@@ -27,9 +29,9 @@ from typing import Any, Callable, Optional
 
 from .clock import BoundedClock, TimeInterval
 from .network import Network
-from .params import RaftParams, ReadMode
+from .params import RaftParams
 from .prob import PRNG
-from .simulate import Condition, EventLoop, Future, TimeoutError_, wait_for
+from .simulate import Condition, EventLoop, TimeoutError_, wait_for
 
 NOOP = "__noop__"
 END_LEASE = "__end_lease__"
@@ -142,15 +144,17 @@ class Node:
         self.next_index: dict[int, int] = {}
         self.match_index: dict[int, int] = {}
         self.last_index_at_election = 0
-        self.limbo_keys: set[str] = set()
-        self.last_prior_term_index = 0
-        self.ongaro_s: dict[int, float] = {}
+        self.leader_hint: Optional[int] = None  # who we last heard leads
         self._leader_epoch = 0   # bumps every leadership change; stops stale tasks
 
         self._last_heartbeat = loop.now
         self._cond = Condition(loop)     # commit/apply/state changes
         self._new_entries = Condition(loop)
-        self._commit_recheck_scheduled = False
+        # consistency layer: all lease/read/vote/commit-gating decisions are
+        # delegated to the policy selected by params.read_mode. (Local import:
+        # repro.consistency imports from this module.)
+        from ..consistency import make_policy
+        self.policy = make_policy(self)
         # fault injection: freeze the commitIndex the leader advertises so
         # followers replicate entries without learning they are committed —
         # used to engineer a large limbo region (paper §6.6 places 100
@@ -198,6 +202,14 @@ class Node:
     def is_leader(self) -> bool:
         return self.state == "leader" and self.alive
 
+    # compatibility shims: mechanism state lives on the policy
+    @property
+    def limbo_keys(self) -> set:
+        return getattr(self.policy, "limbo_keys", set())
+
+    def _commit_gate_blocked(self) -> bool:
+        return self.policy.gate_commit()
+
     # ------------------------------------------------------ crash / restart
     def crash(self) -> None:
         self.alive = False
@@ -213,6 +225,7 @@ class Node:
         self.commit_index = 0
         self.last_applied = 0
         self.data = {}
+        self.leader_hint = None
         self._last_heartbeat = self.loop.now
         self._refresh_config()       # membership may have changed on disk
         self.net.set_down(self.id, False)
@@ -226,7 +239,7 @@ class Node:
             return self._handle_vote(src, msg)
         if isinstance(msg, AppendEntries):
             return self._handle_append(src, msg)
-        return None
+        return self.policy.on_message(src, msg)
 
     def _step_down(self, term: int) -> None:
         if term > self.term:
@@ -244,13 +257,9 @@ class Node:
         if msg.term == self.term and self.voted_for in (None, msg.candidate):
             up_to_date = (msg.last_log_term, msg.last_log_index) >= (
                 self.log[-1].term, self.last_log_index)
-            # Ongaro leases ([41] §6.4.1) depend on the rule that a node does
-            # not vote within ET of hearing from a leader. LeaseGuard
-            # deliberately does NOT delay elections (paper §3 "Elections").
-            vote_blocked = (
-                self.p.read_mode is ReadMode.ONGARO_LEASE
-                and self.loop.now - self._last_heartbeat < self.p.election_timeout
-            )
+            # e.g. Ongaro leases withhold votes within ET of hearing from a
+            # leader; LeaseGuard deliberately does not delay elections.
+            vote_blocked = self.policy.gate_vote(msg)
             if up_to_date and not vote_blocked:
                 granted = True
                 self.voted_for = msg.candidate
@@ -263,6 +272,7 @@ class Node:
         if msg.term > self.term or self.state != "follower":
             self._step_down(msg.term)
         self._last_heartbeat = self.loop.now
+        self.leader_hint = msg.leader
         # log consistency check
         if msg.prev_index > self.last_log_index or \
                 self.log[msg.prev_index].term != msg.prev_term:
@@ -335,25 +345,14 @@ class Node:
         epoch = self._leader_epoch
         self.next_index = {p: self.last_log_index + 1 for p in self.peers}
         self.match_index = {p: 0 for p in self.peers}
-        self.ongaro_s = {}
         self.last_index_at_election = self.last_log_index
-        # limbo region: (commitIndex, last log index at election]  (§3.3)
-        self.limbo_keys = {
-            self.log[i].key
-            for i in range(self.commit_index + 1, self.last_index_at_election + 1)
-            if not self.log[i].is_control
-        }
-        # O(1) commit-gate cache (§7.1): newest prior-term entry
-        self.last_prior_term_index = 0
-        for i in range(self.last_log_index, -1, -1):
-            if self.log[i].term < self.term:
-                self.last_prior_term_index = i
-                break
+        self.leader_hint = self.id
+        self.policy.on_become_leader()
         if self.p.noop_on_election:
             self._append_local(NOOP, None)
         for p in self.peers:
             self.loop.create_task(self._replicate(p, epoch))
-        self.loop.create_task(self._lease_maintenance(epoch))
+        self.loop.create_task(self.policy.maintenance_task(epoch))
         if self.on_leader is not None:
             self.on_leader(self.id, self.term)
         self._signal()
@@ -396,7 +395,7 @@ class Node:
                 self._step_down(reply.term)
                 return
             if reply.success:
-                self.ongaro_s[peer] = start
+                self.policy.on_append_response(peer, start)
                 if reply.match_index > self.match_index[peer]:
                     self.match_index[peer] = reply.match_index
                 self.next_index[peer] = reply.match_index + 1
@@ -409,29 +408,14 @@ class Node:
 
     async def _wait_new_entries(self, timeout: float) -> None:
         """Wait until new entries are appended, or the heartbeat tick fires."""
-        f = Future(self.loop)
-        self._new_entries._waiters.append(f)
-        self.loop.call_later(timeout, lambda: f.set_result(None) if not f.done() else None)
-        await f
+        await self._new_entries.wait(timeout)
 
-    # -- the LeaseGuard commit gate (Fig. 2 CommitEntry) --------------------
-    def _commit_gate_blocked(self) -> bool:
-        if self.p.read_mode is not ReadMode.LEASEGUARD:
-            return False
-        i = self.last_prior_term_index
-        if i == 0:
-            return False
-        e = self.log[i]
-        if e.key == END_LEASE and e.term == self.log[self.last_index_at_election].term:
-            # planned handover (§5.1): prior leader relinquished its lease.
-            return False
-        return not self.clock.definitely_older_than(e.interval, self.p.delta)
-
+    # -- commit counting (gated by the policy, e.g. LeaseGuard Fig. 2) ------
     def _try_advance_commit(self) -> None:
         if self.state != "leader" or not self.alive:
             return
-        if self._commit_gate_blocked():
-            self._schedule_commit_recheck()
+        if self.policy.gate_commit():
+            self.policy.on_commit_blocked()
             return
         matches = sorted([v for p, v in self.match_index.items()
                           if p in self.config] + [self.last_log_index],
@@ -444,20 +428,6 @@ class Node:
             self.commit_index = m
             self._apply_committed()
 
-    def _schedule_commit_recheck(self) -> None:
-        if self._commit_recheck_scheduled:
-            return
-        self._commit_recheck_scheduled = True
-        e = self.log[self.last_prior_term_index]
-        eta = max(0.0, e.interval.latest + self.p.delta - self.loop.now) \
-            + 2 * self.clock.max_error + 1e-6
-
-        def recheck() -> None:
-            self._commit_recheck_scheduled = False
-            self._try_advance_commit()
-
-        self.loop.call_later(eta, recheck)
-
     def _apply_committed(self) -> None:
         advanced = False
         while self.last_applied < self.commit_index:
@@ -469,28 +439,9 @@ class Node:
                 e.execution_ts = self.loop.now   # commit-on-leader time (§6.2)
             advanced = True
         if advanced:
-            if self.state == "leader" and self.limbo_keys and \
-                    self.log[self.commit_index].term == self.term:
-                self.limbo_keys = set()          # own-term commit ends limbo
+            if self.state == "leader":
+                self.policy.on_commit_advanced()
             self._signal()
-
-    # -- lease upkeep (§5.1) -------------------------------------------------
-    async def _lease_maintenance(self, epoch: int) -> None:
-        if not self.p.lease_maintenance or \
-                self.p.read_mode is not ReadMode.LEASEGUARD:
-            return
-        interval = max(self.p.delta / 4.0, 2 * self.p.heartbeat_interval)
-        while self.alive and self.state == "leader" and self._leader_epoch == epoch:
-            await self.loop.sleep(interval)
-            if not (self.alive and self.state == "leader"
-                    and self._leader_epoch == epoch):
-                return
-            e = self.log[self.commit_index]
-            # refresh when the lease is past half its life and nothing newer
-            # is in flight to extend it
-            if self.last_log_index == self.commit_index and \
-                    self.clock.possibly_older_than(e.interval, self.p.delta / 2):
-                self._append_local(NOOP, None)
 
     async def change_membership(self, new_config: set) -> WriteResult:
         """Single-node reconfiguration (paper §4.4): add or remove ONE
@@ -532,31 +483,12 @@ class Node:
             self._append_local(END_LEASE, None)
 
     # ---------------------------------------------------------- client API
-    def _has_lease_for_read(self) -> tuple[bool, str]:
-        e = self.log[self.commit_index]
-        if not self.clock.lease_valid(e.interval, self.p.delta):
-            return False, "no_lease"
-        if e.term != self.term:
-            # inherited lease (§3.3)
-            if not self.p.inherited_lease_reads:
-                return False, "no_lease"
-        return True, ""
-
-    def _ongaro_has_lease(self) -> bool:
-        fresh = 1  # self counts as "now"
-        for p in self.peers:
-            s = self.ongaro_s.get(p)
-            if s is not None and self.loop.now - s < self.p.election_timeout:
-                fresh += 1
-        return fresh >= self.majority()
-
     async def client_write(self, key: str, value: Any) -> WriteResult:
         if not self.is_leader():
             return WriteResult(False, "not_leader")
-        if self.p.read_mode is ReadMode.LEASEGUARD and \
-                not self.p.defer_commit_writes and self._commit_gate_blocked():
-            # unoptimized log-based lease: refuse writes during the old lease
-            return WriteResult(False, "no_lease")
+        err = self.policy.gate_write()
+        if err:
+            return WriteResult(False, err)
         term0 = self.term
         index = self._append_local(key, value)
         entry = self.log[index]
@@ -574,77 +506,7 @@ class Node:
         return WriteResult(False, "crashed", entry=entry)
 
     async def client_read(self, key: str) -> ReadResult:
-        if not self.is_leader():
-            return ReadResult(False, error="not_leader")
-        mode = self.p.read_mode
-        if mode is ReadMode.INCONSISTENT:
-            return ReadResult(True, list(self.data.get(key, [])),
-                              execution_ts=self.loop.now)
-        if mode is ReadMode.QUORUM:
-            return await self._quorum_read(key)
-        if mode is ReadMode.ONGARO_LEASE:
-            if not self._ongaro_has_lease():
-                return ReadResult(False, error="no_lease")
-            return await self._finish_local_read(key, self.term)
-        # LEASEGUARD
-        ok, err = self._has_lease_for_read()
-        if not ok:
-            return ReadResult(False, error=err)
-        e = self.log[self.commit_index]
-        if e.term != self.term and key in self.limbo_keys:
-            return ReadResult(False, error="limbo")     # §3.3 limbo check
-        return await self._finish_local_read(key, self.term,
-                                             recheck_lease=True)
-
-    async def _finish_local_read(self, key: str, term0: int,
-                                 recheck_lease: bool = False) -> ReadResult:
-        """Wait lastApplied >= commitIndex-at-arrival, then read (Fig. 2)."""
-        ci = self.commit_index
-        deadline = self.loop.now + self.p.read_timeout
-        while self.alive and self.is_leader() and self.term == term0:
-            if self.last_applied >= ci:
-                if recheck_lease:
-                    ok, err = self._has_lease_for_read()
-                    if not ok:
-                        return ReadResult(False, error=err)
-                    e = self.log[self.commit_index]
-                    if e.term != self.term and key in self.limbo_keys:
-                        return ReadResult(False, error="limbo")
-                return ReadResult(True, list(self.data.get(key, [])),
-                                  execution_ts=self.loop.now)
-            if self.loop.now >= deadline:
-                return ReadResult(False, error="timeout")
-            await self._cond_wait(deadline)
-        return ReadResult(False, error="not_leader")
-
-    async def _quorum_read(self, key: str) -> ReadResult:
-        """Raft's default: confirm leadership with a majority, then read."""
-        term0 = self.term
-        ci = self.commit_index
-        msg = AppendEntries(self.term, self.id, self.last_log_index,
-                            self.log[-1].term, [], self.commit_index)
-        futs = [self.net.call(self.id, p, msg) for p in self.peers]
-        acks = 1
-        for f in futs:
-            try:
-                reply: AppendEntriesReply = await wait_for(f, self.p.rpc_timeout)
-            except TimeoutError_:
-                continue
-            if reply.term > self.term:
-                self._step_down(reply.term)
-                return ReadResult(False, error="not_leader")
-            if reply.success:
-                acks += 1
-            if acks >= self.majority():
-                break
-        if acks < self.majority() or self.term != term0 or not self.is_leader():
-            return ReadResult(False, error="no_quorum")
-        res = await self._finish_local_read(key, term0)
-        return res
+        return await self.policy.gate_read(key)
 
     async def _cond_wait(self, deadline: float) -> None:
-        f = Future(self.loop)
-        self._cond._waiters.append(f)
-        self.loop.call_later(max(0.0, deadline - self.loop.now) + 1e-9,
-                             lambda: f.set_result(None) if not f.done() else None)
-        await f
+        await self._cond.wait(max(0.0, deadline - self.loop.now) + 1e-9)

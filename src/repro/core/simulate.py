@@ -255,8 +255,26 @@ class Condition:
             if not w.done():
                 w.set_result(None)
 
+    async def wait(self, timeout: Optional[float] = None) -> None:
+        """Wait for the next notify_all; with ``timeout``, give up after that
+        much simulated time. The condition owns the timeout path so that a
+        timed-out waiter is removed from the waiter list immediately — an
+        idle leader parks here on every heartbeat tick, and leaving resolved
+        futures behind until the next notify_all would grow the list without
+        bound."""
+        f = Future(self.loop)
+        self._waiters.append(f)
+        if timeout is not None:
+            def _expire() -> None:
+                if not f.done():
+                    try:
+                        self._waiters.remove(f)
+                    except ValueError:
+                        pass
+                    f.set_result(None)
+            self.loop.call_later(timeout, _expire)
+        await f
+
     async def wait_until(self, predicate: Callable[[], bool]) -> None:
         while not predicate():
-            f = Future(self.loop)
-            self._waiters.append(f)
-            await f
+            await self.wait()

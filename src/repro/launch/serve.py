@@ -28,6 +28,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    from ..consistency import benchmark_configs
+    ap.add_argument("--consistency", default="leaseguard",
+                    choices=sorted(benchmark_configs(variants=False)),
+                    help="coordination read policy for model-version reads")
     args = ap.parse_args()
 
     if args.arch:
@@ -37,7 +41,7 @@ def main() -> None:
     else:
         cfg = PRESETS[args.preset]
 
-    registry = ClusterRegistry()
+    registry = ClusterRegistry(consistency=args.consistency)
     registry.commit_checkpoint({"step": 0, "path": "(fresh init)",
                                 "sha256": "0" * 64, "n_arrays": 0,
                                 "extra": {"arch": cfg.name}})

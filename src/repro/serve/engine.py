@@ -30,7 +30,13 @@ class Engine:
     arrays for the examples/tests)."""
 
     def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig =
-                 ServeConfig(), registry=None) -> None:
+                 ServeConfig(), registry=None,
+                 consistency: Optional[str] = None) -> None:
+        if registry is None and consistency is not None:
+            # stand up a coordinator with the named policy from the
+            # repro.consistency registry (e.g. "leaseguard", "readindex")
+            from ..coord.registry import ClusterRegistry
+            registry = ClusterRegistry(consistency=consistency)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg

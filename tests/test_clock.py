@@ -1,7 +1,10 @@
 """Bounded-uncertainty clock invariants (paper §2.2, §4.3)."""
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fixed-example fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.clock import BoundedClock, TimeInterval
 from repro.core.prob import PRNG

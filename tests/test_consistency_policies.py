@@ -1,0 +1,220 @@
+"""Conformance suite for the pluggable consistency layer: every policy in
+the registry must elect a leader, commit writes, serve linearizable reads
+(checked via core/checker.py) and survive a leader crash; plus
+policy-specific properties — ReadIndex's batched barrier beats QUORUM's
+per-read round, and follower reads serve locally off one leader RPC."""
+
+import pytest
+
+from repro.consistency import (REGISTRY, FollowerReadPolicy,
+                               benchmark_configs, make_policy,
+                               resolve_read_mode)
+from repro.core import (ClientLogEntry, RaftParams, ReadMode, SimParams,
+                        build_cluster, check_linearizability, run_workload)
+from repro.core.client import Workload
+
+MODES = list(REGISTRY)
+MODE_IDS = [m.value for m in MODES]
+
+
+def run(c, coro):
+    return c.loop.run_until_complete(c.loop.create_task(coro))
+
+
+def crash_and_wait_new_leader(c, ldr, max_time=5.0):
+    ldr.crash()
+    deadline = c.loop.now + max_time
+    while c.loop.now < deadline:
+        c.loop.run_until(c.loop.now + 0.05)
+        new = next((n for n in c.nodes.values()
+                    if n.is_leader() and n is not ldr), None)
+        if new is not None:
+            return new
+    raise RuntimeError("no new leader elected")
+
+
+# --------------------------------------------------------- registry sanity
+def test_registry_names_match_read_modes():
+    for mode, cls in REGISTRY.items():
+        assert cls.name == mode.value
+        assert resolve_read_mode(mode.value) is mode
+        assert resolve_read_mode(cls) is mode
+    # benchmark configs cover every registered policy
+    modes_covered = {cfg["read_mode"] for cfg in benchmark_configs().values()}
+    assert modes_covered == set(REGISTRY)
+
+
+def test_node_policy_matches_read_mode():
+    for mode, cls in REGISTRY.items():
+        c = build_cluster(RaftParams(read_mode=mode), SimParams())
+        c.loop.run_until(0.01)  # start the node tasks before teardown
+        assert all(type(n.policy) is cls for n in c.nodes.values())
+
+
+# ------------------------------------------------------------- conformance
+@pytest.mark.parametrize("mode", MODES, ids=MODE_IDS)
+def test_policy_write_read_failover_conformance(mode):
+    raft = RaftParams(read_mode=mode, election_timeout=0.5,
+                      election_jitter=0.1, heartbeat_interval=0.05,
+                      lease_duration=1.0)
+    c = build_cluster(raft, SimParams(seed=3))
+    ldr = c.wait_for_leader()
+
+    h = []
+    t0 = c.loop.now
+    w = run(c, ldr.client_write("k", 1))
+    assert w.ok
+    h.append(ClientLogEntry("ListAppend", t0, w.entry.execution_ts,
+                            c.loop.now, "k", 1, True))
+    c.loop.run_until(c.loop.now + 0.2)
+    t1 = c.loop.now
+    r = run(c, ldr.client_read("k"))
+    assert r.ok and r.value == [1]
+    h.append(ClientLogEntry("Read", t1, r.execution_ts, c.loop.now,
+                            "k", r.value, True))
+    assert check_linearizability(h) == len(h)
+
+    # leader crash -> failover -> once any inherited lease has expired,
+    # the policy must serve writes and reads again
+    new = crash_and_wait_new_leader(c, ldr)
+    c.loop.run_until(c.loop.now + raft.delta + 0.5)
+    assert run(c, new.client_write("k", 2)).ok
+    r2 = run(c, new.client_read("k"))
+    assert r2.ok and r2.value == [1, 2]
+
+
+@pytest.mark.parametrize("mode", MODES, ids=MODE_IDS)
+def test_policy_linearizable_under_leader_crash(mode):
+    """Workload + crash + full history check, per policy. INCONSISTENT is
+    exempt from the check (being non-linearizable is its point)."""
+    raft = RaftParams(read_mode=mode, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6)
+    sim = SimParams(
+        seed=11, sim_duration=1.0, interarrival=2e-3,
+        follower_read_fraction=0.4 if mode is ReadMode.FOLLOWER_READ else 0.0)
+
+    def script(cluster):
+        cluster.loop.call_later(
+            0.4, lambda: cluster.leader() and cluster.leader().crash())
+
+    res = run_workload(raft, sim, fault_script=script,
+                       check=mode is not ReadMode.INCONSISTENT,
+                       settle_time=2.0)
+    if mode is not ReadMode.INCONSISTENT:
+        assert res.linearizable_ops > 0
+    assert res.reads_ok + res.writes_ok > 0
+
+
+# ------------------------------------------------------- ReadIndex batching
+def test_readindex_fewer_quorum_rounds_than_quorum():
+    """ReadIndex's shared barrier must cost measurably fewer messages than
+    QUORUM's per-read round on a read-heavy workload."""
+    counts = {}
+    ok_counts = {}
+    for mode in (ReadMode.QUORUM, ReadMode.READ_INDEX):
+        raft = RaftParams(read_mode=mode)
+        # 1 ms one-way latency: each barrier round spans many arrivals, the
+        # regime where sharing the round pays off
+        sim = SimParams(sim_duration=1.0, interarrival=300e-6, seed=13,
+                        write_fraction=0.1, one_way_latency_mean=1e-3,
+                        one_way_latency_variance=1e-6)
+        c = build_cluster(raft, sim)
+        c.wait_for_leader()
+        w = Workload(c.loop, c.nodes, c.directory, c.prng.fork(999), sim)
+        base = c.net.messages_sent
+        c.loop.create_task(w.run(sim.sim_duration))
+        c.loop.run_until(c.loop.now + sim.sim_duration + 0.5)
+        counts[mode] = c.net.messages_sent - base
+        ok_counts[mode] = sum(1 for op in w.history if op.success)
+        assert ok_counts[mode] > 500
+    # both serve comparable load, but ReadIndex amortizes the barrier
+    assert counts[ReadMode.READ_INDEX] < 0.5 * counts[ReadMode.QUORUM], \
+        (counts, ok_counts)
+
+
+def test_readindex_no_stale_read_after_failover():
+    """Regression (dissertation §6.4 step 1): a fresh leader must not serve
+    ReadIndex reads before an own-term entry commits — its commitIndex can
+    lag writes the old leader acked, and serving the pre-barrier state is a
+    stale read. Seed 6 with a tiny key space used to trip the checker."""
+    raft = RaftParams(read_mode=ReadMode.READ_INDEX, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03)
+
+    def script(cluster):
+        cluster.loop.call_later(
+            0.4, lambda: cluster.leader() and cluster.leader().crash())
+
+    for seed in (6, 43, 77):
+        sim = SimParams(seed=seed, sim_duration=1.0, interarrival=2e-3,
+                        one_way_latency_mean=2e-3,
+                        one_way_latency_variance=4e-6, n_keys=5)
+        res = run_workload(raft, sim, fault_script=script, check=True,
+                           settle_time=2.0)
+        assert res.linearizable_ops > 0
+
+
+# --------------------------------------------------------- follower reads
+def make_follower_cluster(**kw):
+    raft = RaftParams(read_mode=ReadMode.FOLLOWER_READ, lease_duration=2.0,
+                      election_timeout=0.5, **kw)
+    return build_cluster(raft, SimParams(seed=5))
+
+
+def test_follower_read_serves_locally_after_leader_grant():
+    c = make_follower_cluster()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    c.loop.run_until(c.loop.now + 0.2)  # follower applies the entry
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    before = c.net.messages_sent
+    res = run(c, follower.client_read("x"))
+    assert res.ok and res.value == [1]
+    # exactly one read-index RPC to the leader (replies are not counted
+    # by messages_sent); compare: a quorum read costs one call per peer
+    assert c.net.messages_sent - before == 1
+
+
+def test_follower_read_waits_for_apply():
+    """A freshly written key is readable at a follower even before the
+    heartbeat that advances the follower's commit index: the follower
+    blocks on the leader-issued read index, then serves."""
+    c = make_follower_cluster()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    res = run(c, follower.client_read("x"))
+    assert res.ok and res.value == [1]
+
+
+def test_follower_read_leader_still_serves_leaseguard_reads():
+    c = make_follower_cluster()
+    ldr = c.wait_for_leader()
+    assert isinstance(ldr.policy, FollowerReadPolicy)
+    assert run(c, ldr.client_write("x", 1)).ok
+    c.loop.run_until(c.loop.now + 0.1)
+    before = c.net.messages_sent
+    res = run(c, ldr.client_read("x"))
+    assert res.ok and res.value == [1]
+    assert c.net.messages_sent == before  # leader path is zero-roundtrip
+
+
+def test_follower_read_rejected_for_limbo_key():
+    """The leader's read-index barrier applies the §3.3 limbo check, so a
+    follower cannot observe a key the new leader may not serve itself."""
+    c = make_follower_cluster()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("safe", 1)).ok
+    c.loop.run_until(c.loop.now + 0.3)
+    ldr.freeze_commits()
+    assert run(c, ldr.client_write("limbo_key", 2)).ok
+    t_last = c.loop.now
+    new = crash_and_wait_new_leader(c, ldr)
+    assert c.loop.now < t_last + 2.0, "election must finish inside the lease"
+    assert new._commit_gate_blocked()
+    follower = next(n for n in c.nodes.values()
+                    if n is not new and n.alive)
+    res = run(c, follower.client_read("limbo_key"))
+    assert not res.ok and res.error == "limbo"
+    res = run(c, follower.client_read("safe"))
+    assert res.ok and res.value == [1]

@@ -2,8 +2,12 @@
 and hypothesis property tests over random schedules and fault scripts."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fixed-example fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (ClientLogEntry, LinearizabilityError, RaftParams,
                         ReadMode, SimParams, build_cluster,

@@ -105,3 +105,38 @@ def test_run_until_does_not_execute_future_events():
     assert not fired and loop.now == 0.5
     loop.run_until(1.5)
     assert fired == [1]
+
+
+def test_condition_wait_timeout_purges_waiter():
+    """Timed-out Condition waiters must be removed immediately — an idle
+    Raft leader parks on a Condition every heartbeat tick, and leaking one
+    resolved future per tick grows the waiter list without bound."""
+    loop = EventLoop()
+    cond = Condition(loop)
+    woke = []
+
+    async def parked():
+        for _ in range(50):
+            await cond.wait(timeout=0.1)   # times out every iteration
+            woke.append(loop.now)
+
+    loop.create_task(parked())
+    loop.run_until(10.0)
+    assert len(woke) == 50
+    assert cond._waiters == []
+
+
+def test_condition_wait_notify_before_timeout():
+    loop = EventLoop()
+    cond = Condition(loop)
+    woke = []
+
+    async def parked():
+        await cond.wait(timeout=5.0)
+        woke.append(loop.now)
+
+    loop.create_task(parked())
+    loop.call_later(0.2, cond.notify_all)
+    loop.run_until(10.0)                   # late timeout must be a no-op
+    assert woke == [pytest.approx(0.2)]
+    assert cond._waiters == []

@@ -1,0 +1,270 @@
+"""Policy × scenario × seed linearizability/availability matrix.
+
+Runs every registered consistency policy against every named nemesis
+scenario over many seeds, pushes each history through the omniscient
+checker, and writes ``BENCH_fault_matrix.json`` at the repo root.
+Reduced slices (``--smoke``, ``--policies``, ``--scenarios``, fewer
+seeds) write ``BENCH_fault_matrix_smoke.json`` instead, so they never
+clobber the committed full-cube artifact.
+
+The contract the matrix enforces (and CI smoke-checks):
+
+* every **consistent** policy × every **safe** scenario × every seed is
+  linearizable — zero violations;
+* the **inconsistent** baseline produces detected violations under
+  partition scenarios — the positive control proving the checker bites;
+* identical (seed, scenario, policy) reruns are bit-identical, so the
+  JSON artifact is a stable perf/safety trajectory across PRs.
+
+Usage:
+    python benchmarks/fault_matrix.py [--seeds N] [--smoke]
+        [--scenarios a,b] [--policies x,y] [--include-unsafe] [--jobs N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.consistency import benchmark_configs, split_bench_config  # noqa: E402
+from repro.core import (LinearizabilityError, RaftParams, SimParams,  # noqa: E402
+                        check_linearizability, run_workload)
+from repro.faults import (build_scenario, safe_scenario_names,  # noqa: E402
+                          unsafe_scenario_names)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_fault_matrix.json"
+# reduced slices must not clobber the committed full-cube artifact
+SMOKE_OUT_PATH = REPO_ROOT / "BENCH_fault_matrix_smoke.json"
+
+#: policies with no linearizability claim — exempt from the zero-violation
+#: assertion (and expected to violate under partitions).
+NON_LINEARIZABLE = {"inconsistent"}
+
+#: scenarios under which the inconsistent baseline is expected to produce
+#: checker-detected stale reads (the positive control).
+PARTITION_SCENARIOS = {
+    "leader_crash_restart", "leader_nemesis", "asym_partition_leader_deaf",
+    "asym_partition_leader_mute", "majority_minority",
+}
+
+DEFAULT_SEEDS = 20
+SIM_DURATION = 1.2
+SETTLE_TIME = 1.5
+
+
+def policy_configs() -> dict[str, dict]:
+    """One canonical config per registered policy (no ablation variants).
+    The inconsistent baseline gets a slice of follower-routed reads so
+    partition scenarios can actually produce the stale reads it allows."""
+    configs = benchmark_configs(variants=False)
+    inco = configs.get("inconsistent")
+    if inco is not None:
+        sim = dict(inco.get("sim_params", {}))
+        sim.setdefault("follower_read_fraction", 0.3)
+        inco["sim_params"] = sim
+    return configs
+
+
+def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
+    """One deterministic run; returns a JSON-ready row."""
+    flags, sim_flags = split_bench_config(policy_configs()[policy])
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6,
+                      rpc_timeout=0.15, **flags)
+    sim = SimParams(seed=seed, sim_duration=SIM_DURATION, interarrival=3e-3,
+                    write_fraction=1 / 3, **sim_flags)
+    sc = build_scenario(scenario_name)
+    res = run_workload(raft, sim, fault_script=sc.install, check=False,
+                       settle_time=SETTLE_TIME)
+    try:
+        checked = check_linearizability(res.history)
+        violation = None
+    except LinearizabilityError as e:
+        checked = 0
+        violation = str(e)[:200]
+    ok = res.reads_ok + res.writes_ok
+    fail = res.reads_fail + res.writes_fail
+    return {
+        "policy": policy,
+        "scenario": scenario_name,
+        "seed": seed,
+        "ops_ok": ok,
+        "ops_fail": fail,
+        "reads_ok": res.reads_ok,
+        "writes_ok": res.writes_ok,
+        "availability": round(ok / max(1, ok + fail), 4),
+        "checked_ops": checked,
+        "violation": violation,
+    }
+
+
+def _cell_args(policies, scenarios, seeds):
+    return [(p, s, seed) for p in policies for s in scenarios
+            for seed in seeds]
+
+
+def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
+               jobs: int = 1, progress: bool = True) -> list[dict]:
+    cells = _cell_args(policies, scenarios, seeds)
+    if jobs > 1:
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            rows = list(ex.map(_run_cell_star, cells, chunksize=8))
+    else:
+        rows = []
+        for i, cell in enumerate(cells):
+            rows.append(run_cell(*cell))
+            if progress and (i + 1) % 50 == 0:
+                print(f"# {i + 1}/{len(cells)} cells", file=sys.stderr)
+    rows.sort(key=lambda r: (r["policy"], r["scenario"], r["seed"]))
+    return rows
+
+
+def _run_cell_star(args) -> dict:
+    return run_cell(*args)
+
+
+def summarize(rows: list[dict]) -> list[dict]:
+    """Per (policy, scenario): seeds, violations, mean availability."""
+    agg: dict[tuple[str, str], dict] = {}
+    for r in rows:
+        a = agg.setdefault((r["policy"], r["scenario"]), {
+            "policy": r["policy"], "scenario": r["scenario"], "seeds": 0,
+            "violations": 0, "ops_ok": 0, "ops_fail": 0,
+        })
+        a["seeds"] += 1
+        a["violations"] += 1 if r["violation"] else 0
+        a["ops_ok"] += r["ops_ok"]
+        a["ops_fail"] += r["ops_fail"]
+    out = []
+    for key in sorted(agg):
+        a = agg[key]
+        a["availability"] = round(
+            a["ops_ok"] / max(1, a["ops_ok"] + a["ops_fail"]), 4)
+        out.append(a)
+    return out
+
+
+class FaultMatrixError(AssertionError):
+    """The matrix contract failed: a consistent policy violated
+    linearizability under a safe scenario, or the positive control
+    (inconsistent flagged under partitions) came up empty."""
+
+
+def run(quick: bool = False) -> list[dict]:
+    """benchmarks.run entry point: full matrix, or the CI smoke slice."""
+    return main(["--smoke"] if quick else [])
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=DEFAULT_SEEDS,
+                    help=f"seeds per cell (default {DEFAULT_SEEDS})")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario names (default: all safe)")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy names (default: all)")
+    ap.add_argument("--include-unsafe", action="store_true",
+                    help="also run the beyond-fault-model scenarios")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI slice: 2 scenarios x 2 policies x 5 seeds")
+    ap.add_argument("--jobs", type=int,
+                    default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: BENCH_fault_matrix.json; "
+                         "reduced slices go to BENCH_fault_matrix_smoke.json)")
+    args = ap.parse_args(argv)
+
+    all_policies = list(policy_configs())
+    scenarios = safe_scenario_names()
+    policies = all_policies
+    seeds = list(range(args.seeds))
+    if args.include_unsafe:
+        scenarios = scenarios + unsafe_scenario_names()
+    if args.smoke:
+        scenarios = ["leader_crash_restart", "majority_minority"]
+        policies = ["leaseguard", "quorum"]
+        seeds = list(range(5))
+    if args.scenarios:
+        scenarios = args.scenarios.split(",")
+    if args.policies:
+        policies = args.policies.split(",")
+    # only the canonical cube (every policy x every safe scenario x at
+    # least the default seed count, no unsafe pollution) may overwrite
+    # the committed artifact; every reduced/expanded slice goes to the
+    # smoke path unless --out says otherwise
+    full_cube = (not args.smoke and not args.scenarios and not args.policies
+                 and not args.include_unsafe
+                 and args.seeds >= DEFAULT_SEEDS)
+    out_path = args.out or str(OUT_PATH if full_cube else SMOKE_OUT_PATH)
+
+    n = len(policies) * len(scenarios) * len(seeds)
+    print(f"# fault matrix: {len(policies)} policies x {len(scenarios)} "
+          f"scenarios x {len(seeds)} seeds = {n} cells "
+          f"(jobs={args.jobs})", file=sys.stderr)
+    rows = run_matrix(policies, scenarios, seeds, jobs=args.jobs)
+    summary = summarize(rows)
+
+    consistent = [p for p in policies if p not in NON_LINEARIZABLE]
+    safe = set(safe_scenario_names())
+    bad = [r for r in rows
+           if r["violation"] and r["policy"] in consistent
+           and r["scenario"] in safe]
+    control = [r for r in rows
+               if r["violation"] and r["policy"] in NON_LINEARIZABLE]
+    # the positive control only has teeth when the baseline actually ran
+    # against partitions over enough seeds to make a stale read likely
+    control_expected = (set(policies) & NON_LINEARIZABLE
+                        and set(scenarios) & PARTITION_SCENARIOS
+                        and len(seeds) >= 10)
+
+    artifact = {
+        "policies": policies,
+        "scenarios": scenarios,
+        "seeds": seeds,
+        "consistent_policies": consistent,
+        "consistent_violations": len(bad),
+        "inconsistent_violations": len(control),
+        "summary": summary,
+        "cells": rows,
+    }
+    Path(out_path).write_text(json.dumps(artifact, indent=2, sort_keys=True)
+                              + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+    for s in summary:
+        print(f"{s['policy']:14s} {s['scenario']:28s} "
+              f"seeds={s['seeds']:3d} violations={s['violations']:3d} "
+              f"availability={s['availability']:.3f}")
+    if bad:
+        msg = (f"{len(bad)} linearizability violations in consistent "
+               f"policies under safe scenarios")
+        print(f"\nFAIL: {msg}:", file=sys.stderr)
+        for r in bad[:10]:
+            print(f"  {r['policy']} / {r['scenario']} / seed {r['seed']}: "
+                  f"{r['violation']}", file=sys.stderr)
+        raise FaultMatrixError(msg)
+    if control_expected and not control:
+        msg = ("positive control failed: the inconsistent baseline was "
+               "never flagged under partition scenarios — is the checker "
+               "vacuous?")
+        print(f"\nFAIL: {msg}", file=sys.stderr)
+        raise FaultMatrixError(msg)
+    print(f"\n# zero violations across {len(consistent)} consistent "
+          f"policies"
+          + (f"; inconsistent baseline flagged in {len(control)} cells"
+             if control_expected or control else ""))
+    return summary
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except FaultMatrixError:
+        sys.exit(1)

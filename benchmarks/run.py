@@ -19,8 +19,8 @@ from pathlib import Path
 from repro.consistency import benchmark_configs, split_bench_config
 from repro.core import RaftParams, SimParams, run_workload
 
-from . import (fig5_lease_duration, fig6_latency, fig7_availability,
-               fig8_skewness, fig11_scalability)
+from . import (fault_matrix, fig5_lease_duration, fig6_latency,
+               fig7_availability, fig8_skewness, fig11_scalability)
 from .common import emit
 
 MATRIX_SEED = 42
@@ -75,6 +75,9 @@ FIGS = {
     "fig8_skewness": fig8_skewness.run,
     "fig11_scalability": fig11_scalability.run,
     "consistency_matrix": run_consistency_matrix,
+    # policy x scenario x seed nemesis sweep -> BENCH_fault_matrix.json
+    # (--quick runs the CI smoke slice)
+    "fault_matrix": fault_matrix.run,
 }
 
 

@@ -97,11 +97,18 @@ class ConsistencyPolicy:
     # ------------------------------------------------------- shared helpers
     async def _serve_when_applied(self, key: str, read_index: int,
                                   leader_term: Optional[int] = None,
-                                  recheck=None) -> ReadResult:
+                                  recheck=None, as_of_index: bool = False,
+                                  execution_ts: Optional[float] = None,
+                                  ) -> ReadResult:
         """Serve the local value once lastApplied >= ``read_index``. With
         ``leader_term``, abort if this node stops leading that term.
         ``recheck()`` (if given) re-validates the policy's read
-        precondition after the wait; returning a ReadResult vetoes."""
+        precondition after the wait; returning a ReadResult vetoes.
+
+        ``as_of_index`` cuts the value at ``read_index`` (log-prefix
+        state) instead of serving the current applied state, and
+        ``execution_ts`` overrides the serve-time linearization point —
+        follower reads use both to linearize at the leader's barrier."""
         n = self.node
         deadline = n.loop.now + n.p.read_timeout
         while n.alive:
@@ -113,8 +120,15 @@ class ConsistencyPolicy:
                     veto = recheck()
                     if veto is not None:
                         return veto
-                return ReadResult(True, list(n.data.get(key, [])),
-                                  execution_ts=n.loop.now)
+                if as_of_index:
+                    value = [e.value for e in n.log[1:read_index + 1]
+                             if not e.is_control and e.key == key]
+                else:
+                    value = list(n.data.get(key, []))
+                return ReadResult(
+                    True, value,
+                    execution_ts=n.loop.now if execution_ts is None
+                    else execution_ts)
             if n.loop.now >= deadline:
                 return ReadResult(False, error="timeout")
             await n._cond_wait(deadline)

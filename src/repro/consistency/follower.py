@@ -8,9 +8,10 @@ one light RPC to the leader:
 1. follower -> leader: ``ReadIndexRequest(key)``;
 2. the leader validates its lease for that key — the same zero-roundtrip
    barrier it would apply to a local read, including the §3.3 limbo
-   check — and returns ``readIndex = commitIndex``;
-3. the follower waits until ``lastApplied >= readIndex`` and serves its
-   local value.
+   check — and returns ``readIndex = commitIndex`` plus the barrier
+   timestamp;
+3. the follower waits until ``lastApplied >= readIndex`` and serves the
+   state **as of readIndex**, linearized at the barrier time.
 
 Linearizable because any write committed before the read was issued has
 index <= the leader's commitIndex at barrier time (the lease rules out a
@@ -18,6 +19,20 @@ newer leader having committed past it), and the follower only answers
 once it has applied at least that far. Compared with serving every read
 on the leader this trades one cheap RPC for moving the read data path —
 state-machine access and the value transfer — off the leader.
+
+Two details matter for the linearization point (the nemesis matrix
+caught both as real stale-read bugs):
+
+* the follower must NOT serve its *current* applied state stamped with
+  the *serve* time: the leader may have committed more entries between
+  the barrier and the serve, so claiming a serve-time linearization
+  point orders those committed writes before a read that cannot see
+  them. The read linearizes at the **barrier** — every write committed
+  before the barrier has index <= readIndex, every later commit has a
+  later timestamp;
+* symmetrically, the value must be cut at readIndex even if the
+  follower has already applied further entries, or the read would
+  observe writes from after its own linearization point.
 """
 
 from __future__ import annotations
@@ -41,6 +56,7 @@ class ReadIndexReply:
     term: int
     ok: bool
     read_index: int = 0
+    barrier_ts: float = 0.0     # leader time at barrier = linearization point
     error: str = ""
 
 
@@ -67,7 +83,8 @@ class FollowerReadPolicy(LeaseGuardPolicy):
             err = self._read_barrier(msg.key)
             if err:
                 return ReadIndexReply(n.term, False, error=err)
-            return ReadIndexReply(n.term, True, read_index=n.commit_index)
+            return ReadIndexReply(n.term, True, read_index=n.commit_index,
+                                  barrier_ts=n.loop.now)
         return None
 
     # ----------------------------------------------------- follower side
@@ -90,4 +107,7 @@ class FollowerReadPolicy(LeaseGuardPolicy):
             n._step_down(reply.term)
         if not reply.ok:
             return ReadResult(False, error=reply.error)
-        return await self._serve_when_applied(key, reply.read_index)
+        # serve the state AS OF the read index, linearized at the barrier
+        return await self._serve_when_applied(
+            key, reply.read_index, as_of_index=True,
+            execution_ts=reply.barrier_ts)

@@ -35,18 +35,49 @@ class TimeInterval:
 
 
 class BoundedClock:
-    """Per-node interval clock with bounded, randomized uncertainty."""
+    """Per-node interval clock with bounded, randomized uncertainty.
+
+    Two distinct fault models (both driven by ``repro.faults``):
+
+    * **honest skew/drift** (``set_skew``): the oscillator runs fast or
+      slow, but the clock daemon *knows* it (as AWS TimeSync / clock-bound
+      do) and widens the reported interval so it still contains true time.
+      Safety is preserved by construction; the cost is availability — wider
+      intervals make both LeaseGuard age checks more conservative.
+    * **lying clock** (``faulty``/``fault_skew``): the *claimed* bounds are
+      wrong — true time escapes the interval. This is the paper's §4.3
+      caveat (linearizability is forfeit) and is used by adversarial tests
+      to prove the checker catches the resulting stale reads.
+    """
 
     def __init__(self, loop: EventLoop, prng: PRNG, max_error: float,
                  faulty: bool = False, fault_skew: float = 0.0) -> None:
         self.loop = loop
         self.prng = prng
         self.max_error = max_error
-        # ``faulty`` models a clock whose *claimed* bounds are wrong — used by
-        # tests to demonstrate the paper's §4.3 caveat (linearizability is
-        # forfeit if the interval does not contain true time).
         self.faulty = faulty
         self.fault_skew = fault_skew
+        # honest skew: offset + linear drift from the anchor time
+        self.skew = 0.0
+        self.drift_rate = 0.0
+        self._drift_ref = 0.0
+
+    def set_skew(self, skew: float, drift_rate: float = 0.0) -> None:
+        """Install an honest offset (seconds) and drift (seconds/second),
+        anchored at the current simulated time."""
+        self.skew = skew
+        self.drift_rate = drift_rate
+        self._drift_ref = self.loop.now
+
+    def clear_skew(self) -> None:
+        self.skew = 0.0
+        self.drift_rate = 0.0
+
+    def _skew_now(self) -> float:
+        s = self.skew
+        if self.drift_rate:
+            s += self.drift_rate * (self.loop.now - self._drift_ref)
+        return s
 
     def interval_now(self) -> TimeInterval:
         t = self.loop.now
@@ -54,7 +85,13 @@ class BoundedClock:
             t = t + self.fault_skew  # true time now OUTSIDE claimed bounds
         lo = self.prng.uniform(0.0, self.max_error)
         hi = self.prng.uniform(0.0, self.max_error)
-        return TimeInterval(t - lo, t + hi)
+        s = self._skew_now()
+        if s == 0.0:
+            return TimeInterval(t - lo, t + hi)
+        perceived = t + s
+        # honest: report bounds wide enough to cover both the perceived and
+        # the reference time, so true time stays inside the interval
+        return TimeInterval(min(t, perceived) - lo, max(t, perceived) + hi)
 
     # -- the two asymmetric age checks ------------------------------------
     def definitely_older_than(self, t1: TimeInterval, delta: float) -> bool:

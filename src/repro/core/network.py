@@ -12,7 +12,22 @@ Two latency components model the paper's experiments:
   and the queueing blow-up in Fig. 10.
 
 RPC layer: ``call()`` returns a Future for the reply, with timeout. One-way
-``send()`` is also available. Partitions drop messages in both directions.
+``send()`` is also available.
+
+Fault injection (the nemesis engine, ``repro.faults``) drives three knobs:
+
+* **directional cuts**: partitions are stored per directed link, so
+  asymmetric (one-way) partitions are expressible; the classic
+  ``partition(a, b)`` cuts both directions.
+* **message faults**: composable :class:`MessageFault` rules add extra
+  delay, reorder jitter, probabilistic loss, and duplication, globally or
+  per directed link.
+* **I/O slowdown**: per-node extra service time on top of
+  ``NetParams.io_service_time``.
+
+With no faults installed the PRNG draw sequence is exactly the historical
+one (one lognormal per transmission), so pre-nemesis seeds replay
+bit-identically.
 """
 
 from __future__ import annotations
@@ -32,15 +47,39 @@ class NetParams:
     rpc_timeout: float = 0.5
 
 
+@dataclass
+class MessageFault:
+    """One active message-perturbation rule.
+
+    ``src``/``dst`` of ``None`` match any sender/receiver; both set
+    restricts the rule to that directed link. Multiple installed rules
+    compose: delays and jitter add, drop/duplicate draws are independent.
+    """
+
+    extra_delay: float = 0.0    # deterministic added one-way latency
+    jitter: float = 0.0         # uniform extra in [0, jitter] -> reordering
+    drop_prob: float = 0.0      # iid loss per message
+    dup_prob: float = 0.0       # iid duplication per message
+    src: Optional[int] = None
+    dst: Optional[int] = None
+
+    def matches(self, src: int, dst: int) -> bool:
+        return (self.src is None or self.src == src) and \
+               (self.dst is None or self.dst == dst)
+
+
 class Network:
     def __init__(self, loop: EventLoop, prng: PRNG, params: NetParams) -> None:
         self.loop = loop
         self.prng = prng
         self.params = params
         self._handlers: dict[int, Callable[[int, Any], Any]] = {}
-        self._partitioned: set[frozenset[int]] = set()
+        self._cut: set[tuple[int, int]] = set()   # directed blocked links
         self._down: set[int] = set()
         self._io_busy_until: dict[int, float] = {}
+        self._io_slow: dict[int, float] = {}      # per-node extra service time
+        self._faults: dict[int, MessageFault] = {}
+        self._fault_seq = 0
         self._rpc_seq = 0
         self._pending: dict[int, Future] = {}
         self.messages_sent = 0
@@ -52,13 +91,22 @@ class Network:
         self._handlers[node_id] = handler
 
     def partition(self, a: int, b: int) -> None:
-        self._partitioned.add(frozenset((a, b)))
+        self._cut.add((a, b))
+        self._cut.add((b, a))
+
+    def partition_oneway(self, src: int, dst: int) -> None:
+        """Cut only src -> dst; dst can still reach src."""
+        self._cut.add((src, dst))
 
     def heal(self, a: int = -1, b: int = -1) -> None:
         if a < 0:
-            self._partitioned.clear()
+            self._cut.clear()
         else:
-            self._partitioned.discard(frozenset((a, b)))
+            self._cut.discard((a, b))
+            self._cut.discard((b, a))
+
+    def heal_oneway(self, src: int, dst: int) -> None:
+        self._cut.discard((src, dst))
 
     def set_down(self, node_id: int, down: bool = True) -> None:
         if down:
@@ -70,18 +118,70 @@ class Network:
         return (
             src not in self._down
             and dst not in self._down
-            and frozenset((src, dst)) not in self._partitioned
+            and (src, dst) not in self._cut
         )
+
+    # -- fault knobs ---------------------------------------------------------
+    def add_fault(self, fault: MessageFault) -> int:
+        """Install a message-perturbation rule; returns a removal handle."""
+        self._fault_seq += 1
+        self._faults[self._fault_seq] = fault
+        return self._fault_seq
+
+    def remove_fault(self, handle: int) -> None:
+        self._faults.pop(handle, None)
+
+    def set_io_slowdown(self, node_id: int, extra_service_time: float) -> None:
+        """Extra per-message I/O service time for one node (0 clears)."""
+        if extra_service_time > 0.0:
+            self._io_slow[node_id] = extra_service_time
+        else:
+            self._io_slow.pop(node_id, None)
 
     # -- I/O serialization ---------------------------------------------------
     def _io_delay(self, node_id: int) -> float:
         """Serialize a node's message processing through one I/O queue."""
-        svc = self.params.io_service_time
+        svc = self.params.io_service_time + self._io_slow.get(node_id, 0.0)
         if svc <= 0:
             return 0.0
         start = max(self.loop.now, self._io_busy_until.get(node_id, 0.0))
         self._io_busy_until[node_id] = start + svc
         return (start + svc) - self.loop.now
+
+    def _delivery_delays(self, src: int, dst: int) -> list[float]:
+        """One delay per delivered copy of a message on src -> dst; empty
+        list = dropped in flight. Matches the historical single-lognormal
+        draw exactly when no fault rules are installed."""
+        io = self._io_delay(src)
+        base = io + self.prng.lognormal_mean_var(
+            self.params.one_way_latency_mean, self.params.one_way_latency_variance
+        )
+        if not self._faults:
+            return [base]
+        copies = 1
+        extra = 0.0
+        jitter = 0.0
+        for handle in sorted(self._faults):
+            f = self._faults[handle]
+            if not f.matches(src, dst):
+                continue
+            if f.drop_prob > 0.0 and self.prng.random() < f.drop_prob:
+                return []
+            if f.dup_prob > 0.0 and self.prng.random() < f.dup_prob:
+                copies += 1
+            extra += f.extra_delay
+            jitter += f.jitter
+        delays = []
+        for i in range(copies):
+            d = base if i == 0 else io + self.prng.lognormal_mean_var(
+                self.params.one_way_latency_mean,
+                self.params.one_way_latency_variance,
+            )
+            d += extra
+            if jitter > 0.0:
+                d += self.prng.uniform(0.0, jitter)
+            delays.append(d)
+        return delays
 
     # -- messaging -----------------------------------------------------------
     def send(self, src: int, dst: int, msg: Any, size: int = 256) -> None:
@@ -95,6 +195,10 @@ class Network:
         rid = self._rpc_seq
         fut = Future(self.loop)
         self._pending[rid] = fut
+        # reap the pending entry well after every caller has timed out, so
+        # dropped messages (partitions, loss faults) don't leak futures
+        self.loop.call_later(4 * self.params.rpc_timeout,
+                             lambda: self._pending.pop(rid, None))
         self._transmit(src, dst, msg, size, reply_to=rid)
         return fut
 
@@ -107,10 +211,6 @@ class Network:
                   reply_to: Optional[int]) -> None:
         self.messages_sent += 1
         self.bytes_sent += size
-        io = self._io_delay(src)
-        delay = io + self.prng.lognormal_mean_var(
-            self.params.one_way_latency_mean, self.params.one_way_latency_variance
-        )
 
         def deliver() -> None:
             if not self.reachable(src, dst):
@@ -120,20 +220,17 @@ class Network:
                 return
             reply = handler(src, msg)
             if reply_to is not None and reply is not None:
-                # reply travels back with its own I/O + network delay
-                rio = self._io_delay(dst)
-                rdelay = rio + self.prng.lognormal_mean_var(
-                    self.params.one_way_latency_mean,
-                    self.params.one_way_latency_variance,
-                )
+                # reply travels back with its own I/O + network delay (and
+                # is subject to the same loss/duplication faults)
+                for rdelay in self._delivery_delays(dst, src):
+                    def deliver_reply() -> None:
+                        if not self.reachable(dst, src):
+                            return
+                        fut = self._pending.pop(reply_to, None)
+                        if fut is not None and not fut.done():
+                            fut.set_result(reply)
 
-                def deliver_reply() -> None:
-                    if not self.reachable(dst, src):
-                        return
-                    fut = self._pending.pop(reply_to, None)
-                    if fut is not None and not fut.done():
-                        fut.set_result(reply)
+                    self.loop.call_later(rdelay, deliver_reply)
 
-                self.loop.call_later(rdelay, deliver_reply)
-
-        self.loop.call_later(delay, deliver)
+        for delay in self._delivery_delays(src, dst):
+            self.loop.call_later(delay, deliver)

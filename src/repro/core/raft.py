@@ -162,8 +162,12 @@ class Node:
         self.freeze_commit_broadcast = False
         self._frozen_commit = 0
 
+        # bumps on every crash/restart so a timer task from a previous
+        # incarnation exits instead of running alongside the new one
+        self._timer_gen = 0
+
         net.register(node_id, self._on_message)
-        loop.create_task(self._election_timer())
+        loop.create_task(self._election_timer(self._timer_gen))
 
     # ------------------------------------------------------------- helpers
     @property
@@ -215,11 +219,23 @@ class Node:
         self.alive = False
         self.state = "follower"
         self._leader_epoch += 1
+        self._timer_gen += 1
         self.net.set_down(self.id, True)
         self._signal()
 
-    def restart(self) -> None:
-        """Come back with persistent state (term, voted_for, log) intact."""
+    def restart(self, wipe_disk: bool = False) -> None:
+        """Come back from a crash with persistent state (term, voted_for,
+        log) intact. With ``wipe_disk`` the persistent state is ALSO lost —
+        the node rejoins as if freshly installed. That exceeds Raft's fault
+        model (a wiped voter can re-vote in a term and break Leader
+        Completeness), which is exactly why the nemesis engine offers it:
+        the linearizability matrix classifies it as an *unsafe* fault.
+        The static membership config is assumed to survive reinstalls (it
+        lives in deployment config, not the Raft log)."""
+        if wipe_disk:
+            self.term = 0
+            self.voted_for = None
+            self.log = [_SENTINEL]
         self.alive = True
         self.state = "follower"
         self.commit_index = 0
@@ -228,8 +244,12 @@ class Node:
         self.leader_hint = None
         self._last_heartbeat = self.loop.now
         self._refresh_config()       # membership may have changed on disk
+        # policy state is process-volatile: a restarted node starts fresh
+        from ..consistency import make_policy
+        self.policy = make_policy(self)
         self.net.set_down(self.id, False)
-        self.loop.create_task(self._election_timer())
+        self._timer_gen += 1
+        self.loop.create_task(self._election_timer(self._timer_gen))
 
     # --------------------------------------------------------- RPC handler
     def _on_message(self, src: int, msg: Any) -> Any:
@@ -301,8 +321,8 @@ class Node:
         return AppendEntriesReply(self.term, True, match)
 
     # ------------------------------------------------------------ elections
-    async def _election_timer(self) -> None:
-        while self.alive:
+    async def _election_timer(self, gen: int) -> None:
+        while self.alive and self._timer_gen == gen:
             timeout = self.p.election_timeout + self.prng.uniform(
                 0.0, self.p.election_jitter)
             deadline = self._last_heartbeat + timeout

@@ -1,0 +1,36 @@
+"""Deterministic, composable fault injection (the nemesis engine).
+
+Three layers:
+
+* :mod:`repro.faults.base` — the :class:`Fault` protocol, the
+  :class:`Window`/:class:`Scenario` scheduler, and :class:`FaultContext`
+  (deterministic victim selection + activation trace);
+* :mod:`repro.faults.library` — the fault catalogue: asymmetric and
+  partial partitions, majority/minority splits, honest and lying clock
+  skew/drift, crash-restart with or without disk loss, message delay /
+  duplication / reordering / loss, I/O slowdown, and the leader-chasing
+  nemesis;
+* :mod:`repro.faults.scenarios` — the named scenario registry (safe vs
+  beyond-the-fault-model schedules) plus ``random_scenario`` for fuzzing.
+
+Everything runs on the simulated event loop: a (seed, scenario, policy)
+triple replays bit-identically. ``benchmarks/fault_matrix.py`` sweeps the
+full policy × scenario × seed cube through ``check_linearizability``.
+"""
+
+from .base import Fault, FaultContext, Scenario, Window
+from .library import (ClockSkew, CrashRestart, IoSlowdown, IsolateLeader,
+                      LeaderNemesis, MajorityMinority, MessageChaos,
+                      OneWayLink, PartialPartition)
+from .scenarios import (SCENARIOS, build_scenario, random_scenario,
+                        safe_scenario_names, scenario,
+                        unsafe_scenario_names)
+
+__all__ = [
+    "Fault", "FaultContext", "Scenario", "Window",
+    "ClockSkew", "CrashRestart", "IoSlowdown", "IsolateLeader",
+    "LeaderNemesis", "MajorityMinority", "MessageChaos", "OneWayLink",
+    "PartialPartition",
+    "SCENARIOS", "build_scenario", "random_scenario",
+    "safe_scenario_names", "scenario", "unsafe_scenario_names",
+]

@@ -1,0 +1,282 @@
+"""The fault library: every perturbation the nemesis engine can apply.
+
+Network faults build on ``Network``'s directional cuts and
+:class:`~repro.core.network.MessageFault` rules; clock faults on
+``BoundedClock.set_skew`` (honest) and ``faulty`` (lying); process faults
+on ``Node.crash``/``Node.restart(wipe_disk=...)``.
+
+Victim selection goes through ``FaultContext.pick(scope)`` and is
+resolved at *activation* time, so e.g. ``scope="leader"`` targets
+whoever leads when the window opens — and :class:`LeaderNemesis`
+re-resolves on every firing, chasing each newly elected leader.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.network import MessageFault
+from .base import Fault, FaultContext
+
+
+# ---------------------------------------------------------------- partitions
+class _PartitionFault(Fault):
+    """Shared undo bookkeeping: subclasses cut directed links via
+    ``_cut``; ``stop`` heals exactly what was cut."""
+
+    def __init__(self) -> None:
+        self._cuts: list[tuple[int, int]] = []
+
+    def _cut(self, ctx: FaultContext, src: int, dst: int) -> None:
+        ctx.net.partition_oneway(src, dst)
+        self._cuts.append((src, dst))
+
+    def _cut_pair(self, ctx: FaultContext, a: int, b: int) -> None:
+        self._cut(ctx, a, b)
+        self._cut(ctx, b, a)
+
+    def stop(self, ctx: FaultContext) -> None:
+        for src, dst in self._cuts:
+            ctx.net.heal_oneway(src, dst)
+        self._cuts.clear()
+
+
+class IsolateLeader(_PartitionFault):
+    """Cut the current leader off from everyone. ``direction``:
+
+    * ``both`` — classic symmetric isolation;
+    * ``out``  — the leader can hear but not be heard (followers miss
+      heartbeats and elect; the deposed leader learns of it);
+    * ``in``   — the leader can be heard but hears nothing (followers stay
+      quiet, the leader cannot commit: an availability trap).
+    """
+
+    def __init__(self, direction: str = "both") -> None:
+        super().__init__()
+        assert direction in ("both", "in", "out"), direction
+        self.direction = direction
+        self.name = f"isolate_leader[{direction}]"
+
+    def start(self, ctx: FaultContext) -> None:
+        vid = ctx.leader_id()
+        for other in ctx.ids():
+            if other == vid:
+                continue
+            if self.direction in ("both", "out"):
+                self._cut(ctx, vid, other)
+            if self.direction in ("both", "in"):
+                self._cut(ctx, other, vid)
+
+
+class MajorityMinority(_PartitionFault):
+    """Split the cluster into two sides; ``leader_in_minority`` puts the
+    leader on the losing side (the classic failover-forcing split)."""
+
+    def __init__(self, leader_in_minority: bool = True) -> None:
+        super().__init__()
+        self.leader_in_minority = leader_in_minority
+        side = "minority" if leader_in_minority else "majority"
+        self.name = f"majority_minority[leader_in_{side}]"
+
+    def start(self, ctx: FaultContext) -> None:
+        if self.leader_in_minority:
+            minority = set(ctx.minority(with_leader=True))
+        else:
+            minority = set(ctx.minority(with_leader=False))
+        for a in ctx.ids():
+            for b in ctx.ids():
+                if a < b and (a in minority) != (b in minority):
+                    self._cut_pair(ctx, a, b)
+
+
+class PartialPartition(_PartitionFault):
+    """Cut a single follower-follower link: both endpoints still see the
+    rest of the cluster (the Cloudflare-outage topology that traps naive
+    Raft implementations in election loops)."""
+
+    name = "partial_partition"
+
+    def start(self, ctx: FaultContext) -> None:
+        followers = ctx.followers()
+        if len(followers) >= 2:
+            self._cut_pair(ctx, followers[0], followers[1])
+
+
+class OneWayLink(_PartitionFault):
+    """Cut exactly one directed link between the two lowest followers."""
+
+    name = "oneway_link"
+
+    def start(self, ctx: FaultContext) -> None:
+        followers = ctx.followers()
+        if len(followers) >= 2:
+            self._cut(ctx, followers[0], followers[1])
+
+
+# -------------------------------------------------------------- clock faults
+class ClockSkew(Fault):
+    """Per-node clock skew/drift. Honest by default (bounds widen, safety
+    holds, availability degrades); ``lie=True`` makes the clock claim its
+    normal tight bounds while actually being off — the §4.3 fault model
+    breach that forfeits linearizability."""
+
+    def __init__(self, skew: float, drift_rate: float = 0.0,
+                 scope: str = "minority", lie: bool = False) -> None:
+        self.skew = skew
+        self.drift_rate = drift_rate
+        self.scope = scope
+        self.lie = lie
+        kind = "lying" if lie else "honest"
+        self.name = f"clock_skew[{kind},{scope}]"
+        self._victims: list[int] = []
+
+    def start(self, ctx: FaultContext) -> None:
+        self._victims = ctx.pick(self.scope)
+        for nid in self._victims:
+            clock = ctx.nodes[nid].clock
+            if self.lie:
+                clock.faulty = True
+                clock.fault_skew = self.skew
+            else:
+                clock.set_skew(self.skew, self.drift_rate)
+
+    def stop(self, ctx: FaultContext) -> None:
+        for nid in self._victims:
+            clock = ctx.nodes[nid].clock
+            if self.lie:
+                clock.faulty = False
+                clock.fault_skew = 0.0
+            else:
+                clock.clear_skew()
+        self._victims = []
+
+
+# ------------------------------------------------------------ process faults
+class CrashRestart(Fault):
+    """Crash the scope's nodes, restart them ``downtime`` later. With
+    ``wipe_disk`` the restart loses persistent state (term/vote/log) —
+    beyond Raft's fault model, hence only in unsafe scenarios."""
+
+    def __init__(self, scope: str = "leader", downtime: float = 0.3,
+                 wipe_disk: bool = False) -> None:
+        self.scope = scope
+        self.downtime = downtime
+        self.wipe_disk = wipe_disk
+        wipe = ",wipe" if wipe_disk else ""
+        self.name = f"crash_restart[{scope}{wipe}]"
+        self._down: list[int] = []
+
+    def start(self, ctx: FaultContext) -> None:
+        for nid in ctx.pick(self.scope):
+            node = ctx.nodes[nid]
+            if not node.alive:
+                continue
+            node.crash()
+            self._down.append(nid)
+            ctx.loop.call_later(
+                self.downtime, lambda n=node: self._restart(ctx, n))
+
+    def _restart(self, ctx: FaultContext, node) -> None:
+        if not node.alive:
+            node.restart(wipe_disk=self.wipe_disk)
+            ctx.note(f"restarted node {node.id}"
+                     f"{' (disk wiped)' if self.wipe_disk else ''}")
+        if node.id in self._down:
+            self._down.remove(node.id)
+
+    def stop(self, ctx: FaultContext) -> None:
+        # window closes early: bring anything still down back now
+        for nid in list(self._down):
+            node = ctx.nodes[nid]
+            if not node.alive:
+                node.restart(wipe_disk=self.wipe_disk)
+        self._down.clear()
+
+
+class LeaderNemesis(Fault):
+    """The leader-chasing nemesis: every ``period`` it checks for a leader
+    of a term it has not struck yet and crash-restarts it. Because the
+    victim is re-resolved per firing, each newly elected leader gets hit
+    in turn — the schedule the paper's availability story must survive."""
+
+    def __init__(self, period: float = 0.5, downtime: float = 0.25,
+                 wipe_disk: bool = False) -> None:
+        self.period = period
+        self.downtime = downtime
+        self.wipe_disk = wipe_disk
+        self.name = f"leader_nemesis[p={period}]"
+        self._active = False
+        self._last_struck_term = -1
+
+    def start(self, ctx: FaultContext) -> None:
+        self._active = True
+        self._last_struck_term = -1
+        self._tick(ctx)
+
+    def _tick(self, ctx: FaultContext) -> None:
+        if not self._active:
+            return
+        ldr = ctx.leader()
+        if ldr is not None and ldr.alive and ldr.is_leader() \
+                and ldr.term > self._last_struck_term:
+            self._last_struck_term = ldr.term
+            ctx.note(f"nemesis strikes leader {ldr.id} (term {ldr.term})")
+            ldr.crash()
+            ctx.loop.call_later(
+                self.downtime,
+                lambda n=ldr: n.restart(wipe_disk=self.wipe_disk)
+                if not n.alive else None)
+        ctx.loop.call_later(self.period, lambda: self._tick(ctx))
+
+    def stop(self, ctx: FaultContext) -> None:
+        self._active = False
+        for node in ctx.nodes.values():
+            if not node.alive:
+                node.restart(wipe_disk=self.wipe_disk)
+
+
+# ------------------------------------------------------------ message faults
+class MessageChaos(Fault):
+    """Install a :class:`MessageFault` rule for the window: extra delay,
+    reorder jitter, probabilistic loss, duplication — globally or on one
+    directed link."""
+
+    def __init__(self, extra_delay: float = 0.0, jitter: float = 0.0,
+                 drop_prob: float = 0.0, dup_prob: float = 0.0,
+                 src: Optional[int] = None, dst: Optional[int] = None,
+                 label: str = "") -> None:
+        self.rule = MessageFault(extra_delay=extra_delay, jitter=jitter,
+                                 drop_prob=drop_prob, dup_prob=dup_prob,
+                                 src=src, dst=dst)
+        self.name = f"message_chaos[{label}]" if label else "message_chaos"
+        self._handle: Optional[int] = None
+
+    def start(self, ctx: FaultContext) -> None:
+        self._handle = ctx.net.add_fault(self.rule)
+
+    def stop(self, ctx: FaultContext) -> None:
+        if self._handle is not None:
+            ctx.net.remove_fault(self._handle)
+            self._handle = None
+
+
+class IoSlowdown(Fault):
+    """Extra per-message I/O service time on the scope's nodes (models a
+    slow disk / saturated NIC rather than a slow network)."""
+
+    def __init__(self, extra_service_time: float = 200e-6,
+                 scope: str = "leader") -> None:
+        self.extra = extra_service_time
+        self.scope = scope
+        self.name = f"io_slowdown[{scope}]"
+        self._victims: list[int] = []
+
+    def start(self, ctx: FaultContext) -> None:
+        self._victims = ctx.pick(self.scope)
+        for nid in self._victims:
+            ctx.net.set_io_slowdown(nid, self.extra)
+
+    def stop(self, ctx: FaultContext) -> None:
+        for nid in self._victims:
+            ctx.net.set_io_slowdown(nid, 0.0)
+        self._victims = []

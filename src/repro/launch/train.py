@@ -60,7 +60,10 @@ def run_training(cfg: ArchConfig, shape: ShapeConfig, steps: int,
     registry = registry or ClusterRegistry()
     registry.register_worker(worker_id, {"arch": cfg.name})
 
-    opt_cfg = OptConfig(name=cfg.optimizer, warmup_steps=20,
+    # warmup proportional to short runs: a 40-step demo should not spend
+    # half its budget below full LR
+    opt_cfg = OptConfig(name=cfg.optimizer,
+                        warmup_steps=min(20, max(2, steps // 10)),
                         total_steps=max(steps, 100))
     latest = registry.latest_checkpoint()
     template = jax.eval_shape(

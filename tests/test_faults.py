@@ -1,0 +1,333 @@
+"""Unit tests for the nemesis engine: directional partitions, message
+fault knobs, clock skew/drift honesty, crash-restart (with and without
+disk loss), victim selection, the scenario registry, and determinism of
+scheduled fault runs."""
+
+import pytest
+
+from repro.core import (EventLoop, NetParams, Network, RaftParams, ReadMode,
+                        SimParams, build_cluster, run_workload)
+from repro.core.clock import BoundedClock
+from repro.core.network import MessageFault
+from repro.core.prob import PRNG
+from repro.faults import (SCENARIOS, CrashRestart, FaultContext, IsolateLeader,
+                          LeaderNemesis, MajorityMinority, MessageChaos,
+                          PartialPartition, Scenario, Window, build_scenario,
+                          random_scenario, safe_scenario_names,
+                          unsafe_scenario_names)
+
+
+# ------------------------------------------------------------- net helpers
+def make_net(**params):
+    loop = EventLoop()
+    net = Network(loop, PRNG(1), NetParams(**params))
+    inbox = {0: [], 1: [], 2: []}
+    for i in inbox:
+        net.register(i, lambda src, msg, i=i: inbox[i].append((src, msg)))
+    return loop, net, inbox
+
+
+# ------------------------------------------------- directional partitions
+def test_oneway_partition_blocks_one_direction_only():
+    loop, net, inbox = make_net()
+    net.partition_oneway(0, 1)
+    net.send(0, 1, "a")   # blocked
+    net.send(1, 0, "b")   # still flows
+    loop.run(max_time=1.0)
+    assert inbox[1] == []
+    assert inbox[0] == [(1, "b")]
+
+
+def test_symmetric_partition_blocks_both_and_heals():
+    loop, net, inbox = make_net()
+    net.partition(0, 1)
+    assert not net.reachable(0, 1) and not net.reachable(1, 0)
+    net.heal(0, 1)
+    assert net.reachable(0, 1) and net.reachable(1, 0)
+    net.partition_oneway(0, 1)
+    net.heal()            # clears directional cuts too
+    assert net.reachable(0, 1)
+
+
+def test_heal_oneway_leaves_other_direction_cut():
+    loop, net, _ = make_net()
+    net.partition(0, 1)
+    net.heal_oneway(0, 1)
+    assert net.reachable(0, 1)
+    assert not net.reachable(1, 0)
+
+
+# ------------------------------------------------------ message fault knobs
+def test_drop_fault_loses_messages():
+    loop, net, inbox = make_net()
+    h = net.add_fault(MessageFault(drop_prob=1.0))
+    net.send(0, 1, "lost")
+    loop.run(max_time=1.0)
+    assert inbox[1] == []
+    net.remove_fault(h)
+    net.send(0, 1, "found")
+    loop.run(max_time=2.0)
+    assert inbox[1] == [(0, "found")]
+
+
+def test_dup_fault_duplicates_messages():
+    loop, net, inbox = make_net()
+    net.add_fault(MessageFault(dup_prob=1.0))
+    net.send(0, 1, "twice")
+    loop.run(max_time=1.0)
+    assert inbox[1] == [(0, "twice"), (0, "twice")]
+
+
+def test_extra_delay_shifts_delivery():
+    loop, net, inbox = make_net()
+    net.add_fault(MessageFault(extra_delay=0.5))
+    net.send(0, 1, "slow")
+    loop.run(max_time=0.4)
+    assert inbox[1] == []
+    loop.run(max_time=2.0)
+    assert inbox[1] == [(0, "slow")]
+
+
+def test_jitter_reorders_messages():
+    loop, net, inbox = make_net()
+    net.add_fault(MessageFault(jitter=0.05))
+    for i in range(40):
+        net.send(0, 1, i)
+    loop.run(max_time=1.0)
+    got = [m for _, m in inbox[1]]
+    assert sorted(got) == list(range(40))   # nothing lost
+    assert got != sorted(got)               # ...but order scrambled
+
+
+def test_link_scoped_fault_only_hits_matching_direction():
+    loop, net, inbox = make_net()
+    net.add_fault(MessageFault(drop_prob=1.0, src=0, dst=1))
+    net.send(0, 1, "dead-link")
+    net.send(1, 0, "reverse-ok")
+    net.send(0, 2, "other-dst-ok")
+    loop.run(max_time=1.0)
+    assert inbox[1] == []
+    assert inbox[0] == [(1, "reverse-ok")]
+    assert inbox[2] == [(0, "other-dst-ok")]
+
+
+def test_io_slowdown_serializes_extra_service_time():
+    loop, net, inbox = make_net(one_way_latency_mean=1e-9,
+                                one_way_latency_variance=1e-20)
+    net.set_io_slowdown(0, 0.1)
+    t0 = loop.now
+    for i in range(3):
+        net.send(0, 1, i)
+    loop.run(max_time=10.0)
+    # three messages serialized through a 0.1s-per-message queue
+    assert loop.now - t0 >= 0.29
+    net.set_io_slowdown(0, 0.0)
+    assert net._io_slow == {}
+
+
+# --------------------------------------------------------------- clock faults
+def test_honest_skew_keeps_true_time_in_bounds():
+    loop = EventLoop()
+    loop.now = 5.0
+    clock = BoundedClock(loop, PRNG(3), max_error=50e-6)
+    for skew in (-0.5, -0.01, 0.0, 0.01, 0.5):
+        clock.set_skew(skew)
+        for _ in range(20):
+            iv = clock.interval_now()
+            assert iv.earliest <= loop.now <= iv.latest, (skew, iv)
+    clock.clear_skew()
+    assert clock.skew == 0.0 and clock.drift_rate == 0.0
+
+
+def test_honest_drift_accumulates_and_stays_honest():
+    loop = EventLoop()
+    clock = BoundedClock(loop, PRNG(3), max_error=50e-6)
+    clock.set_skew(0.0, drift_rate=0.1)
+    loop.now = 2.0   # 0.2s of accumulated drift
+    iv = clock.interval_now()
+    assert iv.earliest <= loop.now <= iv.latest
+    assert iv.latest >= loop.now + 0.2 - 1e-9   # perceived time covered too
+
+
+def test_lying_clock_escapes_bounds():
+    loop = EventLoop()
+    loop.now = 5.0
+    clock = BoundedClock(loop, PRNG(3), max_error=50e-6,
+                         faulty=True, fault_skew=-1.0)
+    iv = clock.interval_now()
+    assert iv.latest < loop.now   # true time OUTSIDE the claimed interval
+
+
+# ------------------------------------------------------------ crash / restart
+def test_restart_with_disk_loss_wipes_persistent_state():
+    c = build_cluster(RaftParams(), SimParams())
+    ldr = c.wait_for_leader()
+    run = lambda coro: c.loop.run_until_complete(c.loop.create_task(coro))
+    assert run(ldr.client_write("k", 1)).ok
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    c.loop.run_until(c.loop.now + 0.2)
+    assert follower.last_log_index > 0 and follower.term > 0
+    follower.crash()
+    follower.restart(wipe_disk=True)
+    assert follower.term == 0
+    assert follower.voted_for is None
+    assert follower.last_log_index == 0
+    # ...and it re-replicates the log from the leader
+    c.loop.run_until(c.loop.now + 0.5)
+    assert follower.last_log_index > 0
+
+
+def test_restart_without_wipe_keeps_log():
+    c = build_cluster(RaftParams(), SimParams())
+    ldr = c.wait_for_leader()
+    run = lambda coro: c.loop.run_until_complete(c.loop.create_task(coro))
+    assert run(ldr.client_write("k", 1)).ok
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    c.loop.run_until(c.loop.now + 0.2)
+    idx, term = follower.last_log_index, follower.term
+    follower.crash()
+    follower.restart()
+    assert follower.last_log_index == idx and follower.term == term
+
+
+def test_rapid_crash_restart_does_not_stack_election_timers():
+    """Each crash/restart bumps the timer generation, so a node that
+    bounces faster than its election timeout still runs exactly one
+    timer task (stacked timers caused spurious elections)."""
+    c = build_cluster(RaftParams(), SimParams())
+    ldr = c.wait_for_leader()
+    follower = next(n for n in c.nodes.values() if n is not ldr)
+    gen0 = follower._timer_gen
+    for _ in range(5):
+        follower.crash()
+        follower.restart()
+    assert follower._timer_gen == gen0 + 10
+    term_before = max(n.term for n in c.nodes.values())
+    c.loop.run_until(c.loop.now + 2.0)
+    # a healthy cluster with one bounced follower must not churn terms
+    assert max(n.term for n in c.nodes.values()) == term_before
+
+
+# ----------------------------------------------------------- victim selection
+def test_fault_context_victim_scopes():
+    c = build_cluster(RaftParams(n_nodes=5), SimParams())
+    ldr = c.wait_for_leader()
+    ctx = FaultContext(c)
+    assert ctx.leader_id() == ldr.id
+    assert ctx.pick("leader") == [ldr.id]
+    assert ldr.id not in ctx.pick("followers")
+    assert len(ctx.pick("minority")) == 2
+    minority_with_leader = ctx.pick("minority+leader")
+    assert minority_with_leader[0] == ldr.id and len(minority_with_leader) == 2
+    assert ctx.pick("all") == sorted(c.nodes)
+    with pytest.raises(ValueError):
+        ctx.pick("everyone")
+
+
+# ------------------------------------------------------------------ scenarios
+def test_registry_has_rich_safe_catalogue():
+    assert len(safe_scenario_names()) >= 8
+    assert len(unsafe_scenario_names()) >= 2
+    assert set(safe_scenario_names()) | set(unsafe_scenario_names()) \
+        == set(SCENARIOS)
+
+
+def test_every_scenario_builds_fresh_instances():
+    for name in SCENARIOS:
+        a, b = build_scenario(name), build_scenario(name)
+        assert a.name == b.name == name
+        assert a is not b
+        assert a.windows and all(w.fault is not v.fault
+                                 for w, v in zip(a.windows, b.windows))
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError):
+        build_scenario("nope")
+
+
+def test_scenario_install_schedules_and_traces():
+    sc = Scenario("t", [Window(IsolateLeader("both"), at=0.1, until=0.3)])
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03)
+    c = build_cluster(raft, SimParams(seed=2))
+    c.wait_for_leader()
+    ctx = sc.install(c)
+    c.loop.run_until(c.loop.now + 0.5)
+    events = [e for _, e in ctx.trace]
+    assert events == ["start isolate_leader[both]",
+                      "stop isolate_leader[both]"]
+    assert not c.net._cut   # healed after the window
+
+
+def test_partition_faults_cut_and_heal_exactly():
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, n_nodes=5)
+    c = build_cluster(raft, SimParams(seed=2))
+    c.wait_for_leader()
+    ctx = FaultContext(c)
+    for fault in (IsolateLeader("in"), IsolateLeader("out"),
+                  MajorityMinority(True), MajorityMinority(False),
+                  PartialPartition()):
+        fault.start(ctx)
+        assert c.net._cut, fault.name
+        fault.stop(ctx)
+        assert not c.net._cut, fault.name
+
+
+def test_leader_nemesis_refires_on_each_new_leader():
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03)
+    c = build_cluster(raft, SimParams(seed=4))
+    c.wait_for_leader()
+    ctx = FaultContext(c)
+    nem = LeaderNemesis(period=0.2, downtime=0.2)
+    nem.start(ctx)
+    c.loop.run_until(c.loop.now + 4.0)
+    nem.stop(ctx)
+    strikes = [e for _, e in ctx.trace if e.startswith("nemesis strikes")]
+    assert len(strikes) >= 2                  # chased more than one leader
+    assert len(set(strikes)) == len(strikes)  # never the same term twice
+    c.loop.run_until(c.loop.now + 0.5)
+    assert all(n.alive for n in c.nodes.values())
+
+
+def test_crash_restart_stop_revives_early():
+    c = build_cluster(RaftParams(), SimParams(seed=2))
+    ldr = c.wait_for_leader()
+    ctx = FaultContext(c)
+    f = CrashRestart("leader", downtime=60.0)
+    f.start(ctx)
+    assert not ldr.alive
+    f.stop(ctx)   # window closes before the scheduled restart
+    assert ldr.alive
+
+
+# --------------------------------------------------------------- determinism
+def _history_fingerprint(seed, scenario_name):
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6)
+    sim = SimParams(seed=seed, sim_duration=0.8, interarrival=4e-3)
+    sc = build_scenario(scenario_name)
+    res = run_workload(raft, sim, fault_script=sc.install, check=False,
+                       settle_time=1.0)
+    return [(op.op_type, op.start_ts, op.execution_ts, op.end_ts, op.key,
+             str(op.value), op.success) for op in res.history]
+
+
+@pytest.mark.parametrize("scenario_name",
+                         ["leader_nemesis", "dup_reorder", "combo_chaos"])
+def test_scenario_runs_are_bit_identical(scenario_name):
+    assert _history_fingerprint(5, scenario_name) == \
+        _history_fingerprint(5, scenario_name)
+
+
+def test_random_scenario_deterministic_and_safe():
+    a, b = random_scenario(123), random_scenario(123)
+    assert [w.fault.name for w in a.windows] == \
+        [w.fault.name for w in b.windows]
+    assert [(w.at, w.until) for w in a.windows] == \
+        [(w.at, w.until) for w in b.windows]
+    assert a.expect_safe
+    assert random_scenario(124).windows != []

@@ -1,5 +1,9 @@
-"""Linearizability: checker unit tests, the §4.3 faulty-clock violation,
-and hypothesis property tests over random schedules and fault scripts."""
+"""Linearizability: checker unit tests, adversarial mutations of
+known-good histories (the oracle must catch every planted violation),
+the §4.3 faulty-clock violation, and hypothesis property tests over
+random schedules and fault scripts."""
+
+import dataclasses
 
 import pytest
 
@@ -84,6 +88,87 @@ def test_checker_tie_groups():
     ]
     with pytest.raises(LinearizabilityError):
         check_linearizability(h2)
+
+
+# ---------------------------------------------- adversarial checker tests
+# Mutate a real, checker-clean history in targeted ways and require the
+# oracle to flag every planted violation — proof the safety net is not
+# vacuously green.
+@pytest.fixture(scope="module")
+def clean_history():
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6)
+    sim = SimParams(seed=23, sim_duration=0.8, interarrival=2e-3)
+    res = run_workload(raft, sim, check=True, settle_time=1.0)
+    assert res.linearizable_ops > 50
+    return res.history
+
+
+def _pick_observing_read(history):
+    """A successful read that observed >= 1 append and shares no execution
+    timestamp with any append to its key (avoids tie-group leniency)."""
+    for r in history:
+        if r.op_type == "Read" and r.success and r.value:
+            append_ts = {a.execution_ts for a in history
+                         if a.op_type == "ListAppend" and a.key == r.key}
+            if r.execution_ts not in append_ts:
+                return r
+    raise AssertionError("no suitable read in history")
+
+
+def test_mutation_dropped_append_is_caught(clean_history):
+    """Remove an append some read observed: the read now sees a value the
+    linearization cannot explain."""
+    r = _pick_observing_read(clean_history)
+    victim = r.value[-1]
+    mutated = [op for op in clean_history
+               if not (op.op_type == "ListAppend" and op.key == r.key
+                       and op.value == victim)]
+    assert len(mutated) == len(clean_history) - 1
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(mutated)
+
+
+def test_mutation_staled_read_is_caught(clean_history):
+    """Truncate a read's observed list: it now misses an append committed
+    before its linearization point."""
+    r = _pick_observing_read(clean_history)
+    stale = dataclasses.replace(r, value=list(r.value[:-1]))
+    mutated = [stale if op is r else op for op in clean_history]
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(mutated)
+
+
+def test_mutation_append_exec_after_response_is_caught(clean_history):
+    """Shift a successful append's execution_ts past its response time."""
+    a = next(op for op in clean_history
+             if op.op_type == "ListAppend" and op.success)
+    shifted = dataclasses.replace(a, execution_ts=a.end_ts + 0.5)
+    mutated = [shifted if op is a else op for op in clean_history]
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(mutated)
+
+
+def test_mutation_read_exec_before_invocation_is_caught(clean_history):
+    """Shift a successful read's execution_ts before its invocation."""
+    r = next(op for op in clean_history
+             if op.op_type == "Read" and op.success)
+    shifted = dataclasses.replace(r, execution_ts=r.start_ts - 0.5)
+    mutated = [shifted if op is r else op for op in clean_history]
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(mutated)
+
+
+def test_mutation_failed_append_given_early_commit_is_caught(clean_history):
+    """Give some append a commit time before its invocation (a 'write from
+    the past'): the omniscient rule must reject it."""
+    a = next(op for op in clean_history
+             if op.op_type == "ListAppend" and op.success)
+    forged = dataclasses.replace(a, success=False,
+                                 execution_ts=a.start_ts - 1.0)
+    mutated = [forged if op is a else op for op in clean_history]
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(mutated)
 
 
 # ------------------------------------------------- §4.3 faulty clock demo

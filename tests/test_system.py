@@ -50,11 +50,12 @@ def test_full_lifecycle_train_failover_serve():
 
 
 def test_loss_decreases_on_structured_data():
-    """The synthetic pipeline is learnable: loss drops over 40 steps."""
+    """The synthetic pipeline is learnable: loss drops over 120 steps
+    (~0.02s/step after compile; 40 steps sat within noise of the margin)."""
     reg = ClusterRegistry()
     with tempfile.TemporaryDirectory() as d:
-        out = run_training(TINY, ShapeConfig("s", "train", 64, 8), 40, d,
-                           ckpt_every=100, registry=reg, log_every=100)
+        out = run_training(TINY, ShapeConfig("s", "train", 64, 8), 120, d,
+                           ckpt_every=200, registry=reg, log_every=100)
     losses = out["losses"]
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, \
         (losses[:5], losses[-5:])

@@ -17,8 +17,13 @@ The contract the matrix enforces (and CI smoke-checks):
   JSON artifact is a stable perf/safety trajectory across PRs.
 
 Usage:
-    python benchmarks/fault_matrix.py [--seeds N] [--smoke]
+    python benchmarks/fault_matrix.py [--seeds N] [--smoke] [--warm-start]
         [--scenarios a,b] [--policies x,y] [--include-unsafe] [--jobs N]
+
+``--warm-start`` restores a cached post-election snapshot per policy
+instead of booting + electing per seed (see ``repro.core.runner``);
+histories differ from the cold sweep but verdicts must match, which the
+flag checks against the committed ``BENCH_fault_matrix.json``.
 """
 
 from __future__ import annotations
@@ -33,7 +38,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.consistency import benchmark_configs, split_bench_config  # noqa: E402
 from repro.core import (LinearizabilityError, RaftParams, SimParams,  # noqa: E402
-                        check_linearizability, run_workload)
+                        check_linearizability, run_workload,
+                        throughput_timeline)
 from repro.faults import (build_scenario, safe_scenario_names,  # noqa: E402
                           unsafe_scenario_names)
 
@@ -41,6 +47,9 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_fault_matrix.json"
 # reduced slices must not clobber the committed full-cube artifact
 SMOKE_OUT_PATH = REPO_ROOT / "BENCH_fault_matrix_smoke.json"
+# warm-start sweeps have different histories (same verdicts); keep them
+# out of the committed cold artifact too
+WARM_OUT_PATH = REPO_ROOT / "BENCH_fault_matrix_warm.json"
 
 #: policies with no linearizability claim — exempt from the zero-violation
 #: assertion (and expected to violate under partitions).
@@ -56,6 +65,8 @@ PARTITION_SCENARIOS = {
 DEFAULT_SEEDS = 20
 SIM_DURATION = 1.2
 SETTLE_TIME = 1.5
+#: availability-curve bin width (seconds) for the per-cell timeline
+TIMELINE_BIN = 0.1
 
 
 def policy_configs() -> dict[str, dict]:
@@ -71,7 +82,8 @@ def policy_configs() -> dict[str, dict]:
     return configs
 
 
-def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
+def run_cell(policy: str, scenario_name: str, seed: int,
+             warm_start: bool = False) -> dict:
     """One deterministic run; returns a JSON-ready row."""
     flags, sim_flags = split_bench_config(policy_configs()[policy])
     raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
@@ -81,7 +93,7 @@ def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
                     write_fraction=1 / 3, **sim_flags)
     sc = build_scenario(scenario_name)
     res = run_workload(raft, sim, fault_script=sc.install, check=False,
-                       settle_time=SETTLE_TIME)
+                       settle_time=SETTLE_TIME, warm_start=warm_start)
     try:
         checked = check_linearizability(res.history)
         violation = None
@@ -90,6 +102,11 @@ def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
         violation = str(e)[:200]
     ok = res.reads_ok + res.writes_ok
     fail = res.reads_fail + res.writes_fail
+    # compact availability curve: ok/fail op counts per TIMELINE_BIN-wide
+    # window from workload start, so failover dips (and how fast each
+    # policy recovers) are visible in the artifact, not just verdicts
+    bins = throughput_timeline(res.history, TIMELINE_BIN, res.t_start,
+                               res.t_start + SIM_DURATION + SETTLE_TIME)
     return {
         "policy": policy,
         "scenario": scenario_name,
@@ -101,17 +118,24 @@ def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
         "availability": round(ok / max(1, ok + fail), 4),
         "checked_ops": checked,
         "violation": violation,
+        "timeline": {
+            "bin_size": TIMELINE_BIN,
+            "t0": round(res.t_start, 9),
+            "ok": [b["reads"] + b["writes"] for b in bins],
+            "fail": [b["read_fail"] + b["write_fail"] for b in bins],
+        },
     }
 
 
-def _cell_args(policies, scenarios, seeds):
-    return [(p, s, seed) for p in policies for s in scenarios
+def _cell_args(policies, scenarios, seeds, warm_start=False):
+    return [(p, s, seed, warm_start) for p in policies for s in scenarios
             for seed in seeds]
 
 
 def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
-               jobs: int = 1, progress: bool = True) -> list[dict]:
-    cells = _cell_args(policies, scenarios, seeds)
+               jobs: int = 1, progress: bool = True,
+               warm_start: bool = False) -> list[dict]:
+    cells = _cell_args(policies, scenarios, seeds, warm_start)
     if jobs > 1:
         from concurrent.futures import ProcessPoolExecutor
         with ProcessPoolExecutor(max_workers=jobs) as ex:
@@ -157,6 +181,44 @@ class FaultMatrixError(AssertionError):
     (inconsistent flagged under partitions) came up empty."""
 
 
+def check_verdict_parity(warm: dict, cold: dict) -> list[str]:
+    """Compare a warm-start artifact against the committed cold one.
+
+    Warm histories legitimately differ from cold (the boot phase is
+    shared and PRNG streams are re-keyed), so parity is defined on
+    *verdicts*: every consistent-policy (policy, scenario) pair must be
+    violation-free in both, and the inconsistent positive control must
+    be flagged in both (aggregate — per-seed flag patterns may differ).
+    Returns a list of human-readable mismatches (empty = parity holds).
+    """
+    problems: list[str] = []
+    key = lambda s: (s["policy"], s["scenario"])  # noqa: E731
+    warm_sum = {key(s): s for s in warm["summary"]}
+    cold_sum = {key(s): s for s in cold["summary"]}
+    shared = sorted(set(warm_sum) & set(cold_sum))
+    if not shared:
+        return ["no overlapping (policy, scenario) pairs to compare"]
+    consistent = set(cold.get("consistent_policies", []))
+    for k in shared:
+        if k[0] in consistent:
+            w, c = warm_sum[k]["violations"], cold_sum[k]["violations"]
+            if (w > 0) != (c > 0):
+                problems.append(
+                    f"{k[0]}/{k[1]}: warm violations={w}, cold={c}")
+    # compare the positive control only when the warm sweep actually ran
+    # the baseline against partitions over enough seeds to arm it
+    control_armed = (set(warm.get("policies", [])) & NON_LINEARIZABLE
+                     and set(warm.get("scenarios", [])) & PARTITION_SCENARIOS
+                     and len(warm.get("seeds", [])) >= 10)
+    if control_armed:
+        w_ctl = warm.get("inconsistent_violations", 0)
+        c_ctl = cold.get("inconsistent_violations", 0)
+        if (w_ctl > 0) != (c_ctl > 0):
+            problems.append(f"positive control: warm flagged {w_ctl} cells, "
+                            f"cold flagged {c_ctl}")
+    return problems
+
+
 def run(quick: bool = False) -> list[dict]:
     """benchmarks.run entry point: full matrix, or the CI smoke slice."""
     return main(["--smoke"] if quick else [])
@@ -174,6 +236,11 @@ def main(argv=None) -> list[dict]:
                     help="also run the beyond-fault-model scenarios")
     ap.add_argument("--smoke", action="store_true",
                     help="CI slice: 2 scenarios x 2 policies x 5 seeds")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="amortize one post-election cluster snapshot per "
+                         "(policy) across seeds; writes "
+                         "BENCH_fault_matrix_warm.json and checks verdict "
+                         "parity against the committed cold artifact")
     ap.add_argument("--jobs", type=int,
                     default=max(1, (os.cpu_count() or 2) - 1))
     ap.add_argument("--out", default=None,
@@ -202,13 +269,19 @@ def main(argv=None) -> list[dict]:
     full_cube = (not args.smoke and not args.scenarios and not args.policies
                  and not args.include_unsafe
                  and args.seeds >= DEFAULT_SEEDS)
-    out_path = args.out or str(OUT_PATH if full_cube else SMOKE_OUT_PATH)
+    if args.warm_start:
+        out_path = args.out or str(WARM_OUT_PATH if full_cube
+                                   else SMOKE_OUT_PATH)
+    else:
+        out_path = args.out or str(OUT_PATH if full_cube else SMOKE_OUT_PATH)
 
     n = len(policies) * len(scenarios) * len(seeds)
     print(f"# fault matrix: {len(policies)} policies x {len(scenarios)} "
           f"scenarios x {len(seeds)} seeds = {n} cells "
-          f"(jobs={args.jobs})", file=sys.stderr)
-    rows = run_matrix(policies, scenarios, seeds, jobs=args.jobs)
+          f"(jobs={args.jobs}{', warm-start' if args.warm_start else ''})",
+          file=sys.stderr)
+    rows = run_matrix(policies, scenarios, seeds, jobs=args.jobs,
+                      warm_start=args.warm_start)
     summary = summarize(rows)
 
     consistent = [p for p in policies if p not in NON_LINEARIZABLE]
@@ -228,15 +301,33 @@ def main(argv=None) -> list[dict]:
         "policies": policies,
         "scenarios": scenarios,
         "seeds": seeds,
+        "warm_start": args.warm_start,
         "consistent_policies": consistent,
         "consistent_violations": len(bad),
         "inconsistent_violations": len(control),
         "summary": summary,
-        "cells": rows,
     }
+    if args.warm_start:
+        # warm sweeps are a throughput vehicle, not the canonical record:
+        # the artifact keeps verdict-level evidence only (the cold matrix
+        # holds the per-cell histories' stats + availability timelines)
+        artifact["n_cells"] = len(rows)
+    else:
+        artifact["cells"] = rows
     Path(out_path).write_text(json.dumps(artifact, indent=2, sort_keys=True)
                               + "\n")
     print(f"# wrote {out_path}", file=sys.stderr)
+
+    if args.warm_start and OUT_PATH.exists():
+        cold = json.loads(OUT_PATH.read_text())
+        problems = check_verdict_parity(artifact, cold)
+        if problems:
+            msg = ("warm-start verdicts diverge from the committed cold "
+                   "matrix: " + "; ".join(problems[:5]))
+            print(f"\nFAIL: {msg}", file=sys.stderr)
+            raise FaultMatrixError(msg)
+        print("# warm-start verdicts match the committed cold matrix",
+              file=sys.stderr)
 
     for s in summary:
         print(f"{s['policy']:14s} {s['scenario']:28s} "

@@ -17,7 +17,7 @@ from .raft import Node
 from .simulate import EventLoop
 
 
-@dataclass
+@dataclass(slots=True)
 class ClientLogEntry:
     """One operation in the history (paper §6.2)."""
     op_type: str                 # "ListAppend" | "Read"
@@ -36,8 +36,13 @@ class Directory:
     def __init__(self) -> None:
         self.leader_id: Optional[int] = None
         self.leader_term = -1
+        #: bumps on every leadership announcement (even stale-term ones);
+        #: lets ``Cluster.wait_for_leader`` block on the event instead of
+        #: polling the node set every 10 ms
+        self.announcements = 0
 
     def on_leader(self, node_id: int, term: int) -> None:
+        self.announcements += 1
         if term >= self.leader_term:
             self.leader_id = node_id
             self.leader_term = term

@@ -25,7 +25,7 @@ from .prob import PRNG
 from .simulate import EventLoop
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class TimeInterval:
     earliest: float
     latest: float
@@ -49,6 +49,9 @@ class BoundedClock:
       caveat (linearizability is forfeit) and is used by adversarial tests
       to prove the checker catches the resulting stale reads.
     """
+
+    __slots__ = ("loop", "prng", "max_error", "faulty", "fault_skew",
+                 "skew", "drift_rate", "_drift_ref")
 
     def __init__(self, loop: EventLoop, prng: PRNG, max_error: float,
                  faulty: bool = False, fault_skew: float = 0.0) -> None:

@@ -32,14 +32,15 @@ bit-identically.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .prob import PRNG
-from .simulate import EventLoop, Future, TimeoutError_, wait_for
+from .simulate import EventLoop, Future, Timer, TimeoutError_, wait_for
 
 
-@dataclass
+@dataclass(slots=True)
 class NetParams:
     one_way_latency_mean: float = 191e-6
     one_way_latency_variance: float = 391e-6 ** 2
@@ -47,7 +48,7 @@ class NetParams:
     rpc_timeout: float = 0.5
 
 
-@dataclass
+@dataclass(slots=True)
 class MessageFault:
     """One active message-perturbation rule.
 
@@ -69,6 +70,12 @@ class MessageFault:
 
 
 class Network:
+    __slots__ = ("loop", "prng", "params", "_handlers", "_cut", "_down",
+                 "_io_busy_until", "_io_slow", "_faults", "_fault_seq",
+                 "_rpc_seq", "_pending", "_reaps", "messages_sent",
+                 "bytes_sent", "messages_delivered", "messages_dropped",
+                 "_lat_mu", "_lat_sigma")
+
     def __init__(self, loop: EventLoop, prng: PRNG, params: NetParams) -> None:
         self.loop = loop
         self.prng = prng
@@ -82,8 +89,22 @@ class Network:
         self._fault_seq = 0
         self._rpc_seq = 0
         self._pending: dict[int, Future] = {}
+        self._reaps: dict[int, "Timer"] = {}      # rid -> pending-reap timer
         self.messages_sent = 0
         self.bytes_sent = 0
+        self.messages_delivered = 0
+        self.messages_dropped = 0                 # unreachable at delivery
+        # the latency distribution is fixed per run: precompute the
+        # underlying normal's (mu, sigma) once instead of per message (the
+        # draw itself is unchanged — same lognormvariate call, same stream)
+        mean, var = params.one_way_latency_mean, params.one_way_latency_variance
+        if mean > 0:
+            sigma2 = math.log(1.0 + var / (mean * mean))
+            self._lat_mu = math.log(mean) - sigma2 / 2.0
+            self._lat_sigma = math.sqrt(sigma2)
+        else:
+            self._lat_mu = None
+            self._lat_sigma = 0.0
 
     # -- topology ----------------------------------------------------------
     def register(self, node_id: int, handler: Callable[[int, Any], Any]) -> None:
@@ -148,14 +169,18 @@ class Network:
         self._io_busy_until[node_id] = start + svc
         return (start + svc) - self.loop.now
 
+    def _latency_draw(self) -> float:
+        """One lognormal network-latency sample (precomputed mu/sigma)."""
+        if self._lat_mu is None:
+            return 0.0
+        return self.prng.lognormvariate(self._lat_mu, self._lat_sigma)
+
     def _delivery_delays(self, src: int, dst: int) -> list[float]:
         """One delay per delivered copy of a message on src -> dst; empty
         list = dropped in flight. Matches the historical single-lognormal
         draw exactly when no fault rules are installed."""
         io = self._io_delay(src)
-        base = io + self.prng.lognormal_mean_var(
-            self.params.one_way_latency_mean, self.params.one_way_latency_variance
-        )
+        base = io + self._latency_draw()
         if not self._faults:
             return [base]
         copies = 1
@@ -173,10 +198,7 @@ class Network:
             jitter += f.jitter
         delays = []
         for i in range(copies):
-            d = base if i == 0 else io + self.prng.lognormal_mean_var(
-                self.params.one_way_latency_mean,
-                self.params.one_way_latency_variance,
-            )
+            d = base if i == 0 else io + self._latency_draw()
             d += extra
             if jitter > 0.0:
                 d += self.prng.uniform(0.0, jitter)
@@ -196,11 +218,16 @@ class Network:
         fut = Future(self.loop)
         self._pending[rid] = fut
         # reap the pending entry well after every caller has timed out, so
-        # dropped messages (partitions, loss faults) don't leak futures
-        self.loop.call_later(4 * self.params.rpc_timeout,
-                             lambda: self._pending.pop(rid, None))
+        # dropped messages (partitions, loss faults) don't leak futures;
+        # the reap timer is cancelled on the fast path (reply delivered)
+        self._reaps[rid] = self.loop.call_later_cancelable(
+            4 * self.params.rpc_timeout, lambda: self._reap_rpc(rid))
         self._transmit(src, dst, msg, size, reply_to=rid)
         return fut
+
+    def _reap_rpc(self, rid: int) -> None:
+        self._pending.pop(rid, None)
+        self._reaps.pop(rid, None)
 
     async def call_wait(self, src: int, dst: int, msg: Any, size: int = 256,
                         timeout: Optional[float] = None) -> Any:
@@ -214,10 +241,12 @@ class Network:
 
         def deliver() -> None:
             if not self.reachable(src, dst):
+                self.messages_dropped += 1
                 return  # dropped; RPC future times out at caller
             handler = self._handlers.get(dst)
             if handler is None:
                 return
+            self.messages_delivered += 1
             reply = handler(src, msg)
             if reply_to is not None and reply is not None:
                 # reply travels back with its own I/O + network delay (and
@@ -225,9 +254,14 @@ class Network:
                 for rdelay in self._delivery_delays(dst, src):
                     def deliver_reply() -> None:
                         if not self.reachable(dst, src):
+                            self.messages_dropped += 1
                             return
                         fut = self._pending.pop(reply_to, None)
+                        timer = self._reaps.pop(reply_to, None)
+                        if timer is not None:
+                            timer.cancel()
                         if fut is not None and not fut.done():
+                            self.messages_delivered += 1
                             fut.set_result(reply)
 
                     self.loop.call_later(rdelay, deliver_reply)

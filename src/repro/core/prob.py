@@ -38,6 +38,11 @@ class PRNG:
         """Interarrival times of a Poisson process with the given mean gap."""
         return self._r.expovariate(1.0 / mean) if mean > 0 else 0.0
 
+    def lognormvariate(self, mu: float, sigma: float) -> float:
+        """Raw lognormal draw from precomputed underlying-normal params —
+        the hot-path twin of :meth:`lognormal_mean_var` (same stream)."""
+        return self._r.lognormvariate(mu, sigma)
+
     def lognormal_mean_var(self, mean: float, variance: float) -> float:
         """Lognormal sample parameterized by its own mean/variance.
 

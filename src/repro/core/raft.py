@@ -31,14 +31,14 @@ from .clock import BoundedClock, TimeInterval
 from .network import Network
 from .params import RaftParams
 from .prob import PRNG
-from .simulate import Condition, EventLoop, TimeoutError_, wait_for
+from .simulate import Condition, EventLoop, Future, TimeoutError_, wait_for
 
 NOOP = "__noop__"
 END_LEASE = "__end_lease__"
 CONFIG = "__config__"          # single-node membership change (paper §4.4)
 
 
-@dataclass
+@dataclass(slots=True)
 class LogEntry:
     term: int
     key: str                       # NOOP / END_LEASE for control entries
@@ -52,7 +52,7 @@ class LogEntry:
 
 
 # ---------------------------------------------------------------- messages
-@dataclass
+@dataclass(slots=True)
 class RequestVote:
     term: int
     candidate: int
@@ -60,13 +60,13 @@ class RequestVote:
     last_log_term: int
 
 
-@dataclass
+@dataclass(slots=True)
 class VoteReply:
     term: int
     granted: bool
 
 
-@dataclass
+@dataclass(slots=True)
 class AppendEntries:
     term: int
     leader: int
@@ -76,7 +76,7 @@ class AppendEntries:
     leader_commit: int
 
 
-@dataclass
+@dataclass(slots=True)
 class AppendEntriesReply:
     term: int
     success: bool
@@ -112,6 +112,16 @@ _SENTINEL = LogEntry(term=0, key=NOOP, value=None,
 
 
 class Node:
+    __slots__ = (
+        "id", "loop", "net", "clock", "prng", "p", "config", "on_leader",
+        "term", "voted_for", "log", "state", "commit_index", "last_applied",
+        "data", "alive", "next_index", "match_index",
+        "last_index_at_election", "leader_hint", "_leader_epoch",
+        "_last_heartbeat", "_cond", "_new_entries", "policy",
+        "freeze_commit_broadcast", "_frozen_commit", "_timer_gen",
+        "_election_sleep",
+    )
+
     def __init__(self, node_id: int, loop: EventLoop, net: Network,
                  clock: BoundedClock, prng: PRNG, params: RaftParams,
                  peers: list[int],
@@ -165,6 +175,10 @@ class Node:
         # bumps on every crash/restart so a timer task from a previous
         # incarnation exits instead of running alongside the new one
         self._timer_gen = 0
+        # the election timer's parked (future, timer); lazy-cancelled on
+        # crash/restart so a dead generation exits immediately instead of
+        # leaving its wakeup in the heap until the old deadline
+        self._election_sleep: Optional[tuple] = None
 
         net.register(node_id, self._on_message)
         loop.create_task(self._election_timer(self._timer_gen))
@@ -221,7 +235,21 @@ class Node:
         self._leader_epoch += 1
         self._timer_gen += 1
         self.net.set_down(self.id, True)
+        self._wake_election_timer()
         self._signal()
+
+    def _wake_election_timer(self) -> None:
+        """Lazy-cancel the parked election timer: its heap entry is marked
+        dead (reaped at pop, never dispatched) and the waiting generation
+        is woken now — it re-checks its guard, sees the generation bump,
+        and exits instead of lingering until the old deadline. No PRNG
+        draw happens on the dead path, so replay is unaffected."""
+        parked = self._election_sleep
+        if parked is not None:
+            f, timer = parked
+            timer.cancel()
+            if not f.done():
+                f.set_result(None)
 
     def restart(self, wipe_disk: bool = False) -> None:
         """Come back from a crash with persistent state (term, voted_for,
@@ -249,6 +277,7 @@ class Node:
         self.policy = make_policy(self)
         self.net.set_down(self.id, False)
         self._timer_gen += 1
+        self._wake_election_timer()   # reap any parked prior-gen wakeup
         self.loop.create_task(self._election_timer(self._timer_gen))
 
     # --------------------------------------------------------- RPC handler
@@ -327,7 +356,14 @@ class Node:
                 0.0, self.p.election_jitter)
             deadline = self._last_heartbeat + timeout
             if self.loop.now < deadline:
-                await self.loop.sleep(deadline - self.loop.now)
+                # cancelable sleep: crash/restart reaps the heap entry and
+                # wakes this generation immediately (it then exits)
+                f = Future(self.loop)
+                timer = self.loop.call_later_cancelable(
+                    deadline - self.loop.now, f._wake)
+                self._election_sleep = (f, timer)
+                await f
+                self._election_sleep = None
                 continue
             if self.state == "leader":
                 self._last_heartbeat = self.loop.now

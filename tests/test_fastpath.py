@@ -1,0 +1,212 @@
+"""Tests for the simulation fast path: lazy-cancel timers, hot-loop
+instrumentation, and warm-start cluster snapshots."""
+
+import pytest
+
+from repro.core import RaftParams, SimParams, run_workload
+from repro.core.runner import (ClusterSnapshot, build_cluster,
+                               clear_warm_cache, warm_cluster)
+from repro.core.simulate import (Condition, EventLoop, Future, TimeoutError_,
+                                 wait_for)
+
+
+def _fingerprint(res):
+    return [(o.op_type, o.start_ts, o.end_ts, o.key, repr(o.value), o.success)
+            for o in res.history]
+
+
+# ---------------------------------------------------------------- timers
+
+
+def test_cancelled_timer_never_fires_and_is_reaped():
+    loop = EventLoop()
+    fired = []
+    t = loop.call_later_cancelable(1.0, lambda: fired.append(1))
+    loop.call_later(2.0, lambda: fired.append(2))
+    t.cancel()
+    assert t.cancelled
+    loop.run()
+    assert fired == [2]
+    assert loop.timers_reaped >= 1
+
+
+def test_cancel_after_fire_is_harmless():
+    loop = EventLoop()
+    fired = []
+    t = loop.call_later_cancelable(0.1, lambda: fired.append(1))
+    loop.run()
+    t.cancel()
+    assert fired == [1]
+
+
+def test_wait_for_reaps_timeout_entry_on_resolve():
+    """The satellite fix: a resolved wait_for must not leave a live
+    timeout callback in the heap (it used to fire into a dead future;
+    now it is cancelled and reaped)."""
+    loop = EventLoop()
+    fut = Future(loop)
+    results = []
+
+    async def main():
+        results.append(await wait_for(fut, 5.0))
+
+    loop.create_task(main())
+    loop.call_later(0.1, lambda: fut.set_result("ok"))
+    loop.run()
+    assert results == ["ok"]
+    # the loop drained completely: the 5 s timeout entry was dead, so the
+    # clock never had to advance to it... but even if popped, it must be
+    # reaped as cancelled, not dispatched
+    assert loop.now < 5.0 or loop.timers_reaped >= 1
+
+
+def test_condition_wait_timeout_entry_cancelled_on_notify():
+    loop = EventLoop()
+    cond = Condition(loop)
+    woke = []
+
+    async def waiter():
+        await cond.wait(timeout=9.0)
+        woke.append(loop.now)
+
+    loop.create_task(waiter())
+    loop.call_later(0.2, cond.notify_all)
+    loop.run()
+    assert woke == [pytest.approx(0.2)]   # resumed by notify, not timeout
+    assert loop.now < 9.0      # never had to idle out to the dead timeout
+    assert cond._waiters == []
+
+
+def test_election_timer_parks_without_heap_stacking():
+    """Crash/restart bumps the node's timer generation; the parked timer
+    from the old generation must be woken and reaped, not left to stack
+    one dead heap entry per restart."""
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03)
+    sim = SimParams(seed=17, sim_duration=0.0)
+    c = build_cluster(raft, sim)
+    leader = c.wait_for_leader()
+    term0 = leader.term
+    follower = next(n for n in c.nodes.values() if not n.is_leader())
+    for _ in range(8):
+        follower.crash()
+        c.loop.run_until(c.loop.now + 0.01)
+        follower.restart()
+        c.loop.run_until(c.loop.now + 0.01)
+    c.loop.run_until(c.loop.now + 2.0)
+    # the parked timer of each dead generation was woken + reaped; no
+    # ghost wakeup from an old generation ever fired an election (the
+    # leader's heartbeats reach the restarted follower well inside its
+    # election timeout, so any term bump would be a generation leak)
+    assert leader.is_leader()
+    assert leader.term == term0
+    assert follower.alive and follower.term == term0
+    assert c.loop.timers_reaped > 0
+
+
+def test_loop_and_network_counters():
+    raft = RaftParams()
+    sim = SimParams(seed=1, sim_duration=0.5)
+    res = run_workload(raft, sim, check=False)
+    assert res.loop_stats["events_popped"] > 0
+    assert res.loop_stats["peak_heap"] > 0
+    assert res.net_stats["messages_delivered"] > 0
+    assert (res.net_stats["messages_delivered"]
+            + res.net_stats["messages_dropped"]
+            <= res.net_stats["messages_sent"]
+            + res.net_stats["messages_delivered"])  # dups can inflate delivery
+    assert res.t_end > res.t_start > 0.0
+
+
+# ----------------------------------------------------------- warm start
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warm_cache():
+    clear_warm_cache()
+    yield
+    clear_warm_cache()
+
+
+def test_warm_start_same_seed_is_deterministic():
+    raft = RaftParams()
+    sim = SimParams(seed=5, sim_duration=0.8, interarrival=3e-3)
+    r1 = run_workload(raft, sim, warm_start=True)
+    r2 = run_workload(raft, sim, warm_start=True)
+    assert _fingerprint(r1) == _fingerprint(r2)
+    assert len(r1.history) > 0
+    assert r1.linearizable_ops > 0
+
+
+def test_warm_start_survives_cache_rebuild():
+    raft = RaftParams()
+    sim = SimParams(seed=5, sim_duration=0.8, interarrival=3e-3)
+    r1 = run_workload(raft, sim, warm_start=True)
+    clear_warm_cache()
+    r2 = run_workload(raft, sim, warm_start=True)
+    assert _fingerprint(r1) == _fingerprint(r2)
+
+
+def test_warm_start_seeds_diverge():
+    raft = RaftParams()
+    r5 = run_workload(raft, SimParams(seed=5, sim_duration=0.8,
+                                      interarrival=3e-3), warm_start=True)
+    r6 = run_workload(raft, SimParams(seed=6, sim_duration=0.8,
+                                      interarrival=3e-3), warm_start=True)
+    assert _fingerprint(r5) != _fingerprint(r6)
+
+
+def test_warm_start_does_not_perturb_cold_runs():
+    """Cold runs must replay bit-identically whether or not warm runs
+    happened in between (the fast path shares no mutable state with the
+    cold path)."""
+    raft = RaftParams()
+    sim = SimParams(seed=9, sim_duration=0.8, interarrival=3e-3)
+    cold1 = run_workload(raft, sim)
+    run_workload(raft, sim, warm_start=True)
+    cold2 = run_workload(raft, sim)
+    assert _fingerprint(cold1) == _fingerprint(cold2)
+
+
+def test_restored_cluster_has_leader_and_serves():
+    raft = RaftParams()
+    sim = SimParams(seed=3, sim_duration=0.5)
+    c = warm_cluster(raft, sim)
+    ldr = c.leader()
+    assert ldr is not None and ldr.is_leader()
+    # replicated boot state survived the restore on every node
+    for n in c.nodes.values():
+        assert n.term >= 1
+        assert len(n.log) >= 1
+
+
+def test_snapshot_is_immutable_across_restores():
+    raft = RaftParams()
+    sim = SimParams(seed=3, sim_duration=0.3, interarrival=3e-3)
+    boot = build_cluster(raft, SimParams(seed=99))
+    boot.wait_for_leader()
+    snap = boot.snapshot()
+    r1 = snap.restore(3)
+    r1.loop.run_until(r1.loop.now + 1.0)       # mutate the first restore
+    r2 = snap.restore(3)
+    r3 = snap.restore(3)
+    fp = lambda c: [(nid, n.term, len(n.log), n.commit_index)  # noqa: E731
+                    for nid, n in sorted(c.nodes.items())]
+    assert fp(r2) == fp(r3)
+
+
+def test_warm_cell_verdict_parity_slice():
+    """Tiny warm-vs-cold slice of the fault matrix: same verdict class
+    (no violations for a consistent policy under a safe scenario)."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.fault_matrix import run_cell
+    for seed in (0, 1):
+        cold = run_cell("leaseguard", "leader_crash_restart", seed)
+        warm = run_cell("leaseguard", "leader_crash_restart", seed,
+                        warm_start=True)
+        assert cold["violation"] is None
+        assert warm["violation"] is None
+        assert warm["ops_ok"] > 0
+        assert set(cold["timeline"]) == {"bin_size", "t0", "ok", "fail"}

@@ -255,7 +255,8 @@ def main(argv=None) -> list[dict]:
     if args.include_unsafe:
         scenarios = scenarios + unsafe_scenario_names()
     if args.smoke:
-        scenarios = ["leader_crash_restart", "majority_minority"]
+        scenarios = ["leader_crash_restart", "majority_minority",
+                     "membership_churn", "disk_loss_safe"]
         policies = ["leaseguard", "quorum"]
         seeds = list(range(5))
     if args.scenarios:

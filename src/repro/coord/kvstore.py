@@ -92,23 +92,56 @@ class LocalCoordinator:
         return xs[-1] if xs else None
 
     # -- elastic scaling (paper §4.4 single-node reconfiguration) ---------
-    def scale_up(self) -> int:
-        """Add one fresh replica to the coordinator set."""
+    def add_node(self, wait_for_promotion: bool = True,
+                 max_sim_time: float = 30.0) -> int:
+        """Add one fresh replica the safe way: it joins as a non-voting
+        learner (receives and applies the log, counts toward nothing),
+        and the leader promotes it to voter via an ordinary CONFIG entry
+        once its match index covers the commit index."""
         new_id = max(self.cluster.nodes) + 1
         ldr = self._leader()
-        self.cluster.spawn_node(new_id, ldr.p)
-        res = self._run(ldr.change_membership(set(ldr.config) | {new_id}))
+        self.cluster.spawn_node(new_id, ldr.p, learner=True)
+        res = self._run(ldr.change_membership(
+            set(ldr.config), learners=set(ldr.learners) | {new_id}))
         if not res.ok:
-            raise CoordinatorError(f"scale_up failed: {res.error}")
+            raise CoordinatorError(f"add_node failed: {res.error}")
+        if wait_for_promotion:
+            loop = self.cluster.loop
+            deadline = loop.now + max_sim_time
+            while loop.now < deadline:
+                ldr = self._leader()
+                if new_id in ldr.config:
+                    return new_id
+                loop.run_until(loop.now + 0.05)
+            raise CoordinatorError(f"node {new_id} was never promoted")
         return new_id
 
+    def remove_node(self, node_id: int, retries: int = 5) -> None:
+        """Remove ANY replica, the current leader included: removing the
+        leader does a planned handover first (§5.1 end-lease, then step
+        aside), waits for the successor, and retries the removal there."""
+        for _ in range(retries):
+            ldr = self._leader()
+            if node_id not in ldr.config and node_id not in ldr.learners:
+                return                          # already out
+            if node_id == ldr.id:
+                self.relinquish_leadership()    # handover, then retry below
+                continue
+            res = self._run(ldr.change_membership(
+                set(ldr.config) - {node_id},
+                learners=set(ldr.learners) - {node_id}))
+            if res.ok:
+                return
+            self.cluster.loop.run_until(self.cluster.loop.now + 0.3)
+        raise CoordinatorError(f"remove_node({node_id}) failed "
+                               f"after {retries} retries")
+
+    # legacy names for the same operations
+    def scale_up(self) -> int:
+        return self.add_node()
+
     def scale_down(self, node_id: int) -> None:
-        ldr = self._leader()
-        if node_id == ldr.id:
-            raise CoordinatorError("cannot remove the leader")
-        res = self._run(ldr.change_membership(set(ldr.config) - {node_id}))
-        if not res.ok:
-            raise CoordinatorError(f"scale_down failed: {res.error}")
+        self.remove_node(node_id)
 
     # -- fault injection ---------------------------------------------------
     def crash_leader(self) -> int:

@@ -36,6 +36,9 @@ class RaftParams:
     # lease upkeep (paper §5.1)
     noop_on_election: bool = True
     lease_maintenance: bool = True          # proactive no-op before expiry
+    # membership: the leader's replication loop promotes a learner to
+    # voter (one CONFIG entry) once its match_index covers commitIndex
+    auto_promote_learners: bool = True
     # clocks (paper §2.2; AWS clock-bound preset is 50 µs)
     max_clock_error: float = 50e-6
     # client-visible timeouts

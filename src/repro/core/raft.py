@@ -111,9 +111,27 @@ _SENTINEL = LogEntry(term=0, key=NOOP, value=None,
                      interval=TimeInterval(-1e18, -1e18))
 
 
+# ------------------------------------------------- membership config codec
+def encode_config(voters, learners=()) -> object:
+    """CONFIG entry value. Voter-only configs keep the legacy encoding (a
+    sorted id list) so old logs and artifacts replay unchanged; configs
+    with learners use ``{"voters": [...], "learners": [...]}``."""
+    if learners:
+        return {"voters": sorted(voters), "learners": sorted(learners)}
+    return sorted(voters)
+
+
+def parse_config(value) -> tuple[set, set]:
+    """(voters, learners) from either CONFIG encoding."""
+    if isinstance(value, dict):
+        return set(value["voters"]), set(value["learners"])
+    return set(value), set()
+
+
 class Node:
     __slots__ = (
-        "id", "loop", "net", "clock", "prng", "p", "config", "on_leader",
+        "id", "loop", "net", "clock", "prng", "p", "config", "learners",
+        "_seed_config", "_seed_learners", "_forced_learner", "on_leader",
         "term", "voted_for", "log", "state", "commit_index", "last_applied",
         "data", "alive", "next_index", "match_index",
         "last_index_at_election", "leader_hint", "_leader_epoch",
@@ -125,7 +143,8 @@ class Node:
     def __init__(self, node_id: int, loop: EventLoop, net: Network,
                  clock: BoundedClock, prng: PRNG, params: RaftParams,
                  peers: list[int],
-                 on_leader: Optional[Callable[[int, int], None]] = None) -> None:
+                 on_leader: Optional[Callable[[int, int], None]] = None,
+                 learners: Optional[list[int]] = None) -> None:
         self.id = node_id
         self.loop = loop
         self.net = net
@@ -134,8 +153,20 @@ class Node:
         self.p = params
         # membership: mutated only via CONFIG log entries (paper §4.4
         # single-node changes — overlapping majorities preserve Leader
-        # Completeness, on which the lease argument rests)
+        # Completeness, on which the lease argument rests). ``config`` is
+        # the VOTER set; ``learners`` receive AppendEntries and apply
+        # state but are excluded from majorities, withhold votes, and
+        # never start elections.
         self.config: set[int] = set(peers)
+        self.learners: set[int] = set(learners or ())
+        # the deployment-time config, used when truncation (or disk loss)
+        # leaves a log with no surviving CONFIG entry
+        self._seed_config: set[int] = set(self.config)
+        self._seed_learners: set[int] = set(self.learners)
+        # a wiped node rejoining via the safe path acts as a learner even
+        # while its (re-replicated) log prefix still lists it as a voter;
+        # cleared once a CONFIG entry recording its learner role arrives
+        self._forced_learner = False
         self.on_leader = on_leader
 
         # persistent state
@@ -190,25 +221,52 @@ class Node:
 
     @property
     def peers(self) -> list[int]:
+        """Voting peers: election + quorum-round targets."""
         return [p for p in self.config if p != self.id]
 
+    @property
+    def replication_peers(self) -> list[int]:
+        """Everyone the leader replicates to: voters AND learners."""
+        return [p for p in self.config if p != self.id] + \
+            [p for p in self.learners if p != self.id]
+
     def majority(self) -> int:
+        """Quorum size over VOTERS only — learners never count."""
         return len(self.config) // 2 + 1
+
+    def is_learner(self) -> bool:
+        """Non-voting: in the learner set, forced by a safe disk-loss
+        rejoin, or simply not (yet / any longer) a voting member."""
+        return self._forced_learner or self.id in self.learners \
+            or self.id not in self.config
 
     def _refresh_config(self) -> None:
         """Adopt the newest CONFIG entry in the log (Raft uses the latest
-        config as soon as it is appended, not committed)."""
+        config as soon as it is appended, not committed). If conflict
+        truncation (or a disk wipe) removed EVERY config entry, fall back
+        to the seed config — silently keeping the truncated-away
+        membership would count majorities against a config no surviving
+        log supports."""
         for i in range(self.last_log_index, 0, -1):
             if self.log[i].key == CONFIG:
-                self._adopt_config(set(self.log[i].value))
+                self._adopt_config(*parse_config(self.log[i].value))
                 return
+        self._adopt_config(set(self._seed_config), set(self._seed_learners))
 
-    def _adopt_config(self, new: set) -> None:
-        added = new - self.config
-        self.config = set(new)
+    def _adopt_config(self, voters: set, learners: set = frozenset()) -> None:
+        old = self.config | self.learners
+        new = set(voters) | set(learners)
+        self.config = set(voters)
+        self.learners = set(learners)
         if self.state == "leader":
-            for p in added:
-                if p not in self.next_index:
+            # prune replication bookkeeping for removed members — without
+            # this, next/match entries (and their heartbeat loops, via the
+            # membership check in _replicate) leak across reconfigurations
+            for p in old - new:
+                self.next_index.pop(p, None)
+                self.match_index.pop(p, None)
+            for p in new - old:
+                if p not in self.next_index and p != self.id:
                     self.next_index[p] = self.last_log_index + 1
                     self.match_index[p] = 0
                     self.loop.create_task(
@@ -251,7 +309,8 @@ class Node:
             if not f.done():
                 f.set_result(None)
 
-    def restart(self, wipe_disk: bool = False) -> None:
+    def restart(self, wipe_disk: bool = False,
+                rejoin_as_learner: bool = False) -> None:
         """Come back from a crash with persistent state (term, voted_for,
         log) intact. With ``wipe_disk`` the persistent state is ALSO lost —
         the node rejoins as if freshly installed. That exceeds Raft's fault
@@ -259,11 +318,18 @@ class Node:
         Completeness), which is exactly why the nemesis engine offers it:
         the linearizability matrix classifies it as an *unsafe* fault.
         The static membership config is assumed to survive reinstalls (it
-        lives in deployment config, not the Raft log)."""
+        lives in deployment config, not the Raft log).
+
+        ``rejoin_as_learner`` is the SAFE wipe path (ROADMAP item): the
+        node comes back refusing to vote or campaign — regardless of what
+        stale log prefixes claim — until a CONFIG entry recording its
+        learner demotion reaches it; the leader then catches it up and
+        auto-promotes it via an ordinary CONFIG entry."""
         if wipe_disk:
             self.term = 0
             self.voted_for = None
             self.log = [_SENTINEL]
+            self._forced_learner = rejoin_as_learner
         self.alive = True
         self.state = "follower"
         self.commit_index = 0
@@ -303,6 +369,11 @@ class Node:
         if msg.term > self.term:
             self._step_down(msg.term)
         granted = False
+        if self.is_learner():
+            # non-voting: a learner (or a wiped node on the safe rejoin
+            # path) must never contribute to an election quorum before its
+            # promotion CONFIG entry — Leader Completeness rests on it
+            return VoteReply(self.term, False)
         if msg.term == self.term and self.voted_for in (None, msg.candidate):
             up_to_date = (msg.last_log_term, msg.last_log_index) >= (
                 self.log[-1].term, self.last_log_index)
@@ -322,10 +393,14 @@ class Node:
             self._step_down(msg.term)
         self._last_heartbeat = self.loop.now
         self.leader_hint = msg.leader
-        # log consistency check
+        # log consistency check; the failure reply carries our last log
+        # index so the leader can clamp a match_index that exceeds our
+        # actual log (only possible after a disk wipe — without it the
+        # clamp is a no-op, since a matched prefix never shrinks within
+        # the leader's term)
         if msg.prev_index > self.last_log_index or \
                 self.log[msg.prev_index].term != msg.prev_term:
-            return AppendEntriesReply(self.term, False, 0)
+            return AppendEntriesReply(self.term, False, self.last_log_index)
         # append / resolve conflicts
         idx = msg.prev_index
         config_touched = False
@@ -344,6 +419,14 @@ class Node:
         if config_touched:
             self._refresh_config()
         match = msg.prev_index + len(msg.entries)
+        if self._forced_learner and 0 < msg.leader_commit <= self.last_log_index:
+            # a wiped node's vote is safe again exactly when its (prefix-
+            # matched) log covers the cluster commit point: from here on it
+            # only votes for candidates at least as complete as that log.
+            # Content-based tests (e.g. "saw a CONFIG demoting me") cannot
+            # distinguish a pre-wipe learner stint from the post-wipe
+            # demotion, so catch-up is the only sound clearing condition.
+            self._forced_learner = False
         if msg.leader_commit > self.commit_index:
             self.commit_index = min(msg.leader_commit, self.last_log_index)
             self._apply_committed()
@@ -365,7 +448,8 @@ class Node:
                 await f
                 self._election_sleep = None
                 continue
-            if self.state == "leader":
+            if self.state == "leader" or self.is_learner():
+                # learners never start elections; they just keep waiting
                 self._last_heartbeat = self.loop.now
                 continue
             await self._run_for_election()
@@ -399,14 +483,15 @@ class Node:
         self.state = "leader"
         self._leader_epoch += 1
         epoch = self._leader_epoch
-        self.next_index = {p: self.last_log_index + 1 for p in self.peers}
-        self.match_index = {p: 0 for p in self.peers}
+        self.next_index = {p: self.last_log_index + 1
+                           for p in self.replication_peers}
+        self.match_index = {p: 0 for p in self.replication_peers}
         self.last_index_at_election = self.last_log_index
         self.leader_hint = self.id
         self.policy.on_become_leader()
         if self.p.noop_on_election:
             self._append_local(NOOP, None)
-        for p in self.peers:
+        for p in self.replication_peers:
             self.loop.create_task(self._replicate(p, epoch))
         self.loop.create_task(self.policy.maintenance_task(epoch))
         if self.on_leader is not None:
@@ -418,15 +503,16 @@ class Node:
         entry = LogEntry(self.term, key, value, self.clock.interval_now())
         self.log.append(entry)
         if key == CONFIG:
-            self._adopt_config(set(value))
+            self._adopt_config(*parse_config(value))
         self._new_entries.notify_all()
         self._try_advance_commit()   # single-node replica sets commit locally
         return self.last_log_index
 
     async def _replicate(self, peer: int, epoch: int) -> None:
-        """Per-follower replication + heartbeat loop."""
+        """Per-follower replication + heartbeat loop (voters AND learners)."""
         while self.alive and self.state == "leader" \
-                and self._leader_epoch == epoch and peer in self.config:
+                and self._leader_epoch == epoch \
+                and (peer in self.config or peer in self.learners):
             ni = self.next_index[peer]
             entries = self.log[ni: ni + self.p.batch_max_entries]
             prev = ni - 1
@@ -450,16 +536,28 @@ class Node:
             if reply.term > self.term:
                 self._step_down(reply.term)
                 return
+            if peer not in self.next_index:
+                return            # removed from the config during the RPC
             if reply.success:
                 self.policy.on_append_response(peer, start)
                 if reply.match_index > self.match_index[peer]:
                     self.match_index[peer] = reply.match_index
                 self.next_index[peer] = reply.match_index + 1
                 self._try_advance_commit()
-                if self.next_index[peer] > self.last_log_index:
+                if peer in self.learners and self.p.auto_promote_learners \
+                        and reply.match_index >= self.commit_index:
+                    # caught up to everything committed: promote to voter
+                    # via an ordinary single-node CONFIG entry
+                    self._maybe_promote_learner(peer)
+                if self.next_index.get(peer, 0) > self.last_log_index:
                     # up to date: wait for new entries or heartbeat tick
                     await self._wait_new_entries(self.p.heartbeat_interval)
             else:
+                # the reply's match_index is the follower's last log index:
+                # clamp our record if its log REGRESSED (disk wipe) so a
+                # lost log is never counted toward a commit majority
+                if reply.match_index < self.match_index[peer]:
+                    self.match_index[peer] = reply.match_index
                 self.next_index[peer] = max(1, self.next_index[peer] - 1)
 
     async def _wait_new_entries(self, timeout: float) -> None:
@@ -499,24 +597,52 @@ class Node:
                 self.policy.on_commit_advanced()
             self._signal()
 
-    async def change_membership(self, new_config: set) -> WriteResult:
-        """Single-node reconfiguration (paper §4.4): add or remove ONE
-        node. The CONFIG entry is an ordinary log entry — it carries a
-        clock interval, extends the lease, and obeys the commit gate, so
-        all LeaseGuard guarantees hold across the change (overlapping
-        majorities preserve Leader Completeness)."""
-        if not self.is_leader():
-            return WriteResult(False, "not_leader")
-        new_config = set(new_config)
-        if len(new_config ^ self.config) != 1:
-            return WriteResult(False, "only_single_node_changes")
-        if self.id not in new_config:
-            return WriteResult(False, "cannot_remove_leader")
-        # one reconfiguration at a time: prior CONFIG must be committed
+    def _reconfig_in_progress(self) -> bool:
+        """One reconfiguration at a time: any uncommitted CONFIG blocks."""
         for i in range(self.last_log_index, self.commit_index, -1):
             if self.log[i].key == CONFIG:
-                return WriteResult(False, "reconfig_in_progress")
-        index = self._append_local(CONFIG, sorted(new_config))
+                return True
+        return False
+
+    def _maybe_promote_learner(self, peer: int) -> None:
+        """Auto-promotion (driven from the replication loop): once a
+        learner's acked match_index covers the leader's commit index, a
+        CONFIG entry moves it into the voter set."""
+        if self.state != "leader" or not self.alive \
+                or peer not in self.learners or self._reconfig_in_progress():
+            return
+        self._append_local(CONFIG, encode_config(self.config | {peer},
+                                                 self.learners - {peer}))
+
+    async def change_membership(self, new_config: set,
+                                learners: Optional[set] = None) -> WriteResult:
+        """Single-node reconfiguration (paper §4.4): add or remove ONE
+        node, add/remove a learner, or change one node's role
+        (learner⇄voter). The CONFIG entry is an ordinary log entry — it
+        carries a clock interval, extends the lease, and obeys the commit
+        gate, so all LeaseGuard guarantees hold across the change
+        (overlapping majorities over the VOTER set preserve Leader
+        Completeness; learner-set changes never move a quorum).
+
+        ``learners=None`` keeps the current learner set minus any node
+        being promoted into ``new_config`` — so the legacy voter-only call
+        shape both adds fresh voters and promotes learners."""
+        if not self.is_leader():
+            return WriteResult(False, "not_leader")
+        new_voters = set(new_config)
+        new_learners = (self.learners - new_voters if learners is None
+                        else set(learners))
+        if new_voters & new_learners:
+            return WriteResult(False, "voter_learner_overlap")
+        affected = (new_voters ^ self.config) | (new_learners ^ self.learners)
+        if len(affected) != 1:
+            return WriteResult(False, "only_single_node_changes")
+        if self.id not in new_voters:
+            return WriteResult(False, "cannot_remove_leader")
+        if self._reconfig_in_progress():
+            return WriteResult(False, "reconfig_in_progress")
+        index = self._append_local(CONFIG,
+                                   encode_config(new_voters, new_learners))
         entry = self.log[index]
         deadline = self.loop.now + self.p.write_timeout
         while self.alive:

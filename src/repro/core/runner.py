@@ -86,16 +86,24 @@ class Cluster:
         raise RuntimeError("no leader elected")
 
     def spawn_node(self, node_id: int, raft: RaftParams,
-                   max_clock_error: float = 50e-6) -> Node:
-        """Create a fresh follower (elastic scaling; it joins the replica
-        set once a leader commits the CONFIG entry that includes it)."""
+                   max_clock_error: float = 50e-6,
+                   learner: bool = True) -> Node:
+        """Create a fresh node (elastic scaling; it joins the replica set
+        once a leader appends the CONFIG entry that includes it). By
+        default the newcomer considers itself a non-voting learner until
+        a replicated CONFIG says otherwise — so it can never elect itself
+        leader of a one-node 'cluster' before it is added."""
         from .clock import BoundedClock
         clock = BoundedClock(self.loop, self.prng.fork(600 + node_id),
                              max_clock_error)
+        if learner:
+            peers, learners = [], [node_id]
+        else:
+            peers, learners = [node_id], []
         node = Node(node_id, self.loop, self.net, clock,
                     self.prng.fork(700 + node_id), raft,
-                    [node_id],        # starts alone; adopts config from log
-                    on_leader=self.directory.on_leader)
+                    peers,            # adopts the real config from the log
+                    on_leader=self.directory.on_leader, learners=learners)
         self.nodes[node_id] = node
         return node
 
@@ -142,6 +150,7 @@ class ClusterSnapshot:
                 "last_applied": n.last_applied,
                 "data": copy.deepcopy(n.data, memo),
                 "config": set(n.config),
+                "learners": set(n.learners),
                 "leader_hint": n.leader_hint,
             }
 
@@ -169,6 +178,7 @@ class ClusterSnapshot:
             node.last_applied = st["last_applied"]
             node.data = copy.deepcopy(st["data"], memo)
             node.config = set(st["config"])
+            node.learners = set(st["learners"])
             node.leader_hint = st["leader_hint"]
             nodes[nid] = node
         cluster = Cluster(loop, net, nodes, directory, root)

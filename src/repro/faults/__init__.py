@@ -7,7 +7,9 @@ Three layers:
   (deterministic victim selection + activation trace);
 * :mod:`repro.faults.library` — the fault catalogue: asymmetric and
   partial partitions, majority/minority splits, honest and lying clock
-  skew/drift, crash-restart with or without disk loss, message delay /
+  skew/drift, crash-restart with or without disk loss, scheduled membership churn
+  (add/learner-promote/remove via ``change_membership``) and the safe
+  wipe-then-learner-rejoin path, message delay /
   duplication / reordering / loss, I/O slowdown, and the leader-chasing
   nemesis;
 * :mod:`repro.faults.scenarios` — the named scenario registry (safe vs
@@ -19,18 +21,21 @@ full policy × scenario × seed cube through ``check_linearizability``.
 """
 
 from .base import Fault, FaultContext, Scenario, Window
-from .library import (ClockSkew, CrashRestart, IoSlowdown, IsolateLeader,
-                      LeaderNemesis, MajorityMinority, MessageChaos,
-                      OneWayLink, PartialPartition)
-from .scenarios import (SCENARIOS, build_scenario, random_scenario,
+from .library import (ClockSkew, CrashRestart, DiskLossRejoin, IoSlowdown,
+                      IsolateLeader, LeaderNemesis, MajorityMinority,
+                      MembershipChaos, MessageChaos, OneWayLink,
+                      PartialPartition)
+from .scenarios import (SCENARIOS, build_scenario,
+                        random_membership_scenario, random_scenario,
                         safe_scenario_names, scenario,
                         unsafe_scenario_names)
 
 __all__ = [
     "Fault", "FaultContext", "Scenario", "Window",
-    "ClockSkew", "CrashRestart", "IoSlowdown", "IsolateLeader",
-    "LeaderNemesis", "MajorityMinority", "MessageChaos", "OneWayLink",
-    "PartialPartition",
-    "SCENARIOS", "build_scenario", "random_scenario",
+    "ClockSkew", "CrashRestart", "DiskLossRejoin", "IoSlowdown",
+    "IsolateLeader", "LeaderNemesis", "MajorityMinority", "MembershipChaos",
+    "MessageChaos", "OneWayLink", "PartialPartition",
+    "SCENARIOS", "build_scenario", "random_membership_scenario",
+    "random_scenario",
     "safe_scenario_names", "scenario", "unsafe_scenario_names",
 ]

@@ -235,6 +235,146 @@ class LeaderNemesis(Fault):
                 node.restart(wipe_disk=self.wipe_disk)
 
 
+# --------------------------------------------------------- membership faults
+class MembershipChaos(Fault):
+    """Scheduled membership churn through ``change_membership`` (paper
+    §4.4): every ``period`` the next op from an add/remove schedule is
+    attempted against the current leader. Adds spawn a fresh node that
+    joins as a non-voting learner (the leader auto-promotes it once its
+    match index covers the commit index); removes drop a voter follower
+    and — with ``decommission`` — crash it for good. Failed attempts
+    (no leader, reconfig in progress, deposed mid-append) retry on the
+    next tick, so the schedule survives overlapping crash/partition
+    faults."""
+
+    def __init__(self, period: float = 0.2, adds: int = 2, removes: int = 2,
+                 decommission: bool = True, victim: str = "low") -> None:
+        self.period = period
+        ops: list[str] = []
+        for i in range(max(adds, removes)):
+            if i < adds:
+                ops.append("add")
+            if i < removes:
+                ops.append("remove")
+        self.ops = ops
+        self.decommission = decommission
+        assert victim in ("low", "high"), victim
+        self.victim = victim
+        self.name = f"membership_chaos[+{adds}/-{removes}]"
+        self._active = False
+        self._i = 0
+        self._busy = False
+        self._pending = None     # spawned-but-not-yet-joined learner
+
+    def start(self, ctx: FaultContext) -> None:
+        self._active = True
+        self._i = 0
+        self._tick(ctx)
+
+    def _tick(self, ctx: FaultContext) -> None:
+        if not self._active or self._i >= len(self.ops):
+            return
+        if not self._busy:
+            ctx.loop.create_task(self._act(ctx))
+        ctx.loop.call_later(self.period, lambda: self._tick(ctx))
+
+    async def _act(self, ctx: FaultContext) -> None:
+        self._busy = True
+        try:
+            ldr = ctx.leader()
+            if ldr is None or not ldr.is_leader():
+                return
+            if self.ops[self._i] == "add":
+                if self._pending is None or not self._pending.alive:
+                    new_id = max(ctx.nodes) + 1
+                    self._pending = ctx.cluster.spawn_node(
+                        new_id, ldr.p, learner=True)
+                res = await ldr.change_membership(
+                    set(ldr.config),
+                    learners=set(ldr.learners) | {self._pending.id})
+                if res.ok:
+                    ctx.note(f"added learner {self._pending.id}")
+                    self._pending = None
+                    self._i += 1
+            else:
+                voters = sorted(v for v in ldr.config if v != ldr.id)
+                if len(voters) < 2:
+                    self._i += 1      # refuse to shrink below two voters
+                    return
+                target = voters[0] if self.victim == "low" else voters[-1]
+                res = await ldr.change_membership(set(ldr.config) - {target})
+                if res.ok:
+                    ctx.note(f"removed voter {target}")
+                    self._i += 1
+                    if self.decommission:
+                        gone = ctx.nodes.get(target)
+                        if gone is not None and gone.alive:
+                            gone.crash()
+        finally:
+            self._busy = False
+
+    def stop(self, ctx: FaultContext) -> None:
+        # membership changes are durable — stopping just ends the churn
+        self._active = False
+
+
+class DiskLossRejoin(Fault):
+    """The SAFE disk-loss path (ROADMAP item): crash the scope's nodes,
+    demote each to a non-voting learner in the replicated config while it
+    is down, then restart it disk-wiped with ``rejoin_as_learner`` — it
+    refuses votes and elections regardless of stale log prefixes, the
+    leader clamps its match index on first contact, replication catches
+    it up, and auto-promotion returns it to the voter set via an ordinary
+    CONFIG entry. Contrast ``CrashRestart(wipe_disk=True)``, which
+    restarts a wiped node as a full voter and breaks Leader
+    Completeness."""
+
+    def __init__(self, scope: str = "minority", downtime: float = 0.2,
+                 repair_timeout: float = 5.0) -> None:
+        self.scope = scope
+        self.downtime = downtime
+        self.repair_timeout = repair_timeout
+        self.name = f"disk_loss_rejoin[{scope}]"
+
+    def start(self, ctx: FaultContext) -> None:
+        for nid in ctx.pick(self.scope):
+            node = ctx.nodes[nid]
+            if not node.alive:
+                continue
+            node.crash()
+            ctx.note(f"crashed node {nid} (disk lost)")
+            ctx.loop.create_task(self._demote(ctx, nid))
+            ctx.loop.call_later(self.downtime,
+                                lambda n=node: self._rejoin(ctx, n))
+
+    async def _demote(self, ctx: FaultContext, nid: int) -> None:
+        """Move the wiped node from the voter to the learner set, retrying
+        across leader changes until the CONFIG entry commits."""
+        deadline = ctx.loop.now + self.repair_timeout
+        while ctx.loop.now < deadline:
+            ldr = ctx.leader()
+            if ldr is not None and ldr.is_leader():
+                if nid not in ldr.config:
+                    return                      # already a learner (or gone)
+                res = await ldr.change_membership(
+                    set(ldr.config) - {nid},
+                    learners=set(ldr.learners) | {nid})
+                if res.ok:
+                    ctx.note(f"demoted wiped node {nid} to learner")
+                    return
+            await ctx.loop.sleep(0.05)
+
+    def _rejoin(self, ctx: FaultContext, node) -> None:
+        if not node.alive:
+            node.restart(wipe_disk=True, rejoin_as_learner=True)
+            ctx.note(f"restarted node {node.id} as wiped learner")
+
+    def stop(self, ctx: FaultContext) -> None:
+        # the repair is durable (learner demotion + auto-promotion live in
+        # the replicated config); nothing to undo when the window closes
+        pass
+
+
 # ------------------------------------------------------------ message faults
 class MessageChaos(Fault):
     """Install a :class:`MessageFault` rule for the window: extra delay,

@@ -25,9 +25,10 @@ import random
 from typing import Callable, Optional
 
 from .base import Scenario, Window
-from .library import (ClockSkew, CrashRestart, IoSlowdown, IsolateLeader,
-                      LeaderNemesis, MajorityMinority, MessageChaos,
-                      OneWayLink, PartialPartition)
+from .library import (ClockSkew, CrashRestart, DiskLossRejoin, IoSlowdown,
+                      IsolateLeader, LeaderNemesis, MajorityMinority,
+                      MembershipChaos, MessageChaos, OneWayLink,
+                      PartialPartition)
 
 #: name -> scenario factory; call ``build_scenario(name)`` for a run-ready
 #: instance. Iteration order is the canonical matrix order.
@@ -168,6 +169,50 @@ def _combo_chaos() -> list[Window]:
     ]
 
 
+# ------------------------------------------------------ membership chaos
+@scenario("membership_churn",
+          description="scheduled add-learner/promote/remove churn through "
+                      "change_membership (paper §4.4)")
+def _membership_churn() -> list[Window]:
+    return [Window(MembershipChaos(period=0.2, adds=2, removes=2), at=0.2,
+                   until=1.1)]
+
+
+@scenario("membership_churn_crash",
+          description="membership churn with the leader crash-restarting "
+                      "mid-schedule")
+def _membership_churn_crash() -> list[Window]:
+    return [
+        Window(MembershipChaos(period=0.2, adds=2, removes=1), at=0.2,
+               until=1.1),
+        Window(CrashRestart("leader", downtime=0.3), at=0.55),
+    ]
+
+
+@scenario("membership_churn_partition",
+          description="membership churn while a follower-follower link is "
+                      "cut, then a majority/minority split")
+def _membership_churn_partition() -> list[Window]:
+    return [
+        Window(MembershipChaos(period=0.25, adds=1, removes=1), at=0.15,
+               until=1.1),
+        Window(PartialPartition(), at=0.3, until=0.7),
+        Window(MajorityMinority(leader_in_minority=True), at=0.8,
+               until=1.1),
+    ]
+
+
+@scenario("disk_loss_safe",
+          description="a follower loses its disk but rejoins as a learner "
+                      "(demote-while-down, catch up, auto-promote), then "
+                      "the leader crashes: the safe default rejoin path")
+def _disk_loss_safe() -> list[Window]:
+    return [
+        Window(DiskLossRejoin("minority", downtime=0.2), at=0.25),
+        Window(CrashRestart("leader", downtime=0.3), at=0.55),
+    ]
+
+
 # -------------------------------------------------- beyond the fault model
 @scenario("clock_lie_leader", expect_safe=False,
           description="leader's clock claims tight bounds while 10s slow: "
@@ -181,8 +226,10 @@ def _clock_lie() -> list[Window]:
 
 
 @scenario("disk_loss", expect_safe=False,
-          description="a follower loses its disk across a restart, then "
-                      "the leader crashes: vote persistence is broken")
+          description="a follower loses its disk across a restart and "
+                      "rejoins as a FULL VOTER, then the leader crashes: "
+                      "vote persistence is broken (the safe default is "
+                      "disk_loss_safe: rejoin as learner, then promote)")
 def _disk_loss() -> list[Window]:
     return [
         Window(CrashRestart("minority", downtime=0.2, wipe_disk=True),
@@ -225,3 +272,42 @@ def random_scenario(seed: int, duration: float = 1.2) -> Scenario:
         windows.append(Window(fault, at=at, until=until))
     return Scenario(f"random_{seed}", windows, expect_safe=True,
                     description=f"random composition (seed {seed})")
+
+
+def random_membership_scenario(seed: int, duration: float = 1.2) -> Scenario:
+    """Random membership-churn schedule: one churn window (add/promote/
+    remove through ``change_membership``, or a safe wipe-then-learner
+    rejoin) overlapped with 0-2 faults from the safe library —
+    deterministic in ``seed``. Exercises learner promotion mid-partition,
+    remove-then-crash, and wipe-then-rejoin interleavings the named
+    catalogue can't enumerate."""
+    rng = random.Random(seed ^ 0x5EED)
+    windows = []
+    if rng.random() < 0.7:
+        churn = MembershipChaos(period=rng.uniform(0.15, 0.35),
+                                adds=rng.randint(1, 2),
+                                removes=rng.randint(0, 2),
+                                decommission=rng.random() < 0.7,
+                                victim=rng.choice(["low", "high"]))
+    else:
+        churn = DiskLossRejoin("minority",
+                               downtime=rng.uniform(0.15, 0.35))
+    windows.append(Window(churn, at=rng.uniform(0.1, 0.3),
+                          until=duration - 0.1))
+    pool = [
+        lambda r: CrashRestart("leader", downtime=r.uniform(0.15, 0.4)),
+        lambda r: PartialPartition(),
+        lambda r: MajorityMinority(leader_in_minority=r.random() < 0.5),
+        lambda r: IsolateLeader(r.choice(["both", "in", "out"])),
+        lambda r: MessageChaos(extra_delay=r.uniform(0.0, 0.015),
+                               jitter=r.uniform(0.0, 0.01),
+                               drop_prob=r.uniform(0.0, 0.15),
+                               label="random"),
+    ]
+    for _ in range(rng.randint(0, 2)):
+        fault = rng.choice(pool)(rng)
+        at = rng.uniform(0.25, 0.6 * duration)
+        until = min(duration - 0.05, at + rng.uniform(0.2, 0.5 * duration))
+        windows.append(Window(fault, at=at, until=until))
+    return Scenario(f"random_membership_{seed}", windows, expect_safe=True,
+                    description=f"random membership churn (seed {seed})")

@@ -1,6 +1,7 @@
 """Elastic scaling of the coordinator through the public API."""
 
 from repro.coord.kvstore import LocalCoordinator
+from repro.core.raft import CONFIG, parse_config
 
 
 def test_coordinator_scale_up_down():
@@ -15,6 +16,42 @@ def test_coordinator_scale_up_down():
     victim = next(i for i in ldr.config if i not in (ldr.id,))
     coord.scale_down(victim)
     assert len(coord._leader().config) == 3
+    assert coord.read_latest("k") == 2
+
+
+def test_add_node_goes_through_learner_stage():
+    """add_node is the safe two-step: join as non-voting learner, then
+    get promoted to voter by the leader once caught up."""
+    coord = LocalCoordinator()
+    for i in range(5):
+        coord.append("k", i)
+    new_id = coord.add_node()
+    ldr = coord._leader()
+    assert new_id in ldr.config and not ldr.learners
+    # the replicated config history shows learner-then-voter, in order
+    configs = [parse_config(e.value) for e in ldr.log if e.key == CONFIG]
+    joined = [i for i, (_, l) in enumerate(configs) if new_id in l]
+    promoted = [i for i, (v, _) in enumerate(configs) if new_id in v]
+    assert joined and promoted and joined[0] < promoted[0]
+    assert coord.read_latest("k") == 4
+    # and the newcomer's state machine really caught up
+    assert coord.cluster.nodes[new_id].data == ldr.data
+
+
+def test_remove_node_targeting_leader_does_handover():
+    """Regression: remove_node(leader) used to fail — a leader cannot
+    remove itself. It now relinquishes leadership (planned handover) and
+    the successor performs the removal."""
+    coord = LocalCoordinator()
+    coord.append("k", 1)
+    coord.add_node()                       # 4 voters: removal keeps quorum 2
+    old_leader = coord._leader().id
+    coord.remove_node(old_leader)
+    ldr = coord._leader()
+    assert ldr.id != old_leader
+    assert old_leader not in ldr.config
+    assert old_leader not in ldr.learners
+    coord.append("k", 2)                   # cluster still fully functional
     assert coord.read_latest("k") == 2
 
 

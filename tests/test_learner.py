@@ -1,0 +1,218 @@
+"""The non-voting learner role (ROADMAP safe-rejoin item, paper §4.4).
+
+A learner receives AppendEntries and applies state but is excluded from
+``majority()``, withholds votes, and never starts elections; the leader
+promotes it to voter via an ordinary CONFIG entry once its match index
+covers the commit index. The safe disk-loss path layers on top: a wiped
+node rejoins as a forced learner, is demoted in the replicated config,
+catches up, and is promoted back.
+"""
+
+from repro.core import RaftParams, SimParams, build_cluster
+from repro.core.raft import (CONFIG, AppendEntries, RequestVote,
+                             encode_config, parse_config)
+
+
+def make(**kw):
+    kw.setdefault("lease_duration", 2.0)
+    kw.setdefault("election_timeout", 0.5)
+    raft = RaftParams(**kw)
+    return build_cluster(raft, SimParams()), raft
+
+
+def settle(c, dt):
+    c.loop.run_until(c.loop.now + dt)
+
+
+def run(c, coro):
+    return c.loop.run_until_complete(c.loop.create_task(coro))
+
+
+def add_learner(c, ldr, raft, node_id):
+    node = c.spawn_node(node_id, raft, learner=True)
+    res = run(c, ldr.change_membership(set(ldr.config),
+                                       learners=set(ldr.learners) | {node_id}))
+    assert res.ok
+    return node
+
+
+# ------------------------------------------------------------ the role itself
+def test_learner_replicates_but_is_excluded_from_majority():
+    c, raft = make(auto_promote_learners=False)
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    learner = add_learner(c, ldr, raft, 3)
+    settle(c, 0.5)
+    # state machine caught up, yet the quorum arithmetic ignores it
+    assert learner.data.get("x") == [1]
+    assert ldr.majority() == 2                   # |{0,1,2}| // 2 + 1
+    assert ldr.learners == {3}
+    assert 3 in ldr.next_index                   # replicated to, though
+    # one follower down: {leader, follower} is still a voter majority
+    followers = [n for n in c.nodes.values()
+                 if n is not ldr and n is not learner]
+    followers[0].crash()
+    assert run(c, ldr.client_write("x", 2)).ok
+    settle(c, 0.3)
+    assert learner.data.get("x") == [1, 2]
+    # both voters down: a caught-up learner must NOT complete the quorum
+    followers[1].crash()
+    res = run(c, ldr.client_write("x", 3), )
+    assert not res.ok
+
+
+def test_learner_withholds_votes():
+    c, raft = make(auto_promote_learners=False)
+    ldr = c.wait_for_leader()
+    learner = add_learner(c, ldr, raft, 3)
+    settle(c, 0.3)
+    # even a maximally up-to-date candidate gets nothing from a learner
+    reply = learner._handle_vote(
+        0, RequestVote(learner.term + 1, 0, 10_000, learner.term + 1))
+    assert not reply.granted
+    assert learner.voted_for is None or learner.voted_for != 0
+
+
+def test_learner_never_starts_elections():
+    c, raft = make(auto_promote_learners=False)
+    ldr = c.wait_for_leader()
+    learner = add_learner(c, ldr, raft, 3)
+    settle(c, 0.3)
+    term0 = learner.term
+    for n in list(c.nodes.values()):
+        if n is not learner:
+            n.crash()
+    settle(c, 3.0)                 # several election timeouts elapse
+    assert learner.state == "follower"
+    assert learner.term == term0   # no candidacy, no term inflation
+
+
+def test_auto_promotion_once_caught_up():
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    learner = add_learner(c, ldr, raft, 3)
+    settle(c, 1.0)
+    # the leader's replication loop promoted it via a CONFIG entry
+    assert 3 in ldr.config and ldr.learners == set()
+    assert ldr.majority() == 3                   # four voters now
+    assert learner.config == {0, 1, 2, 3}
+    configs = [e.value for e in ldr.log if e.key == CONFIG]
+    assert parse_config(configs[-2])[1] == {3}   # joined as learner...
+    assert parse_config(configs[-1])[0] == {0, 1, 2, 3}   # ...then voter
+    # and it votes like any member afterwards
+    reply = learner._handle_vote(
+        0, RequestVote(learner.term + 1, 0, 10_000, learner.term + 1))
+    assert reply.granted
+
+
+def test_config_codec_roundtrip():
+    assert parse_config(encode_config({1, 0, 2})) == ({0, 1, 2}, set())
+    assert parse_config(encode_config({0, 1}, {2})) == ({0, 1}, {2})
+    assert encode_config({2, 0, 1}) == [0, 1, 2]          # legacy shape
+    assert parse_config([0, 1, 2]) == ({0, 1, 2}, set())  # legacy logs
+
+
+# ------------------------------------------------------- safe disk-loss path
+def wipe_and_demote(c, ldr, victim):
+    """The DiskLossRejoin choreography, step by step."""
+    victim.crash()
+    res = run(c, ldr.change_membership(set(ldr.config) - {victim.id},
+                                       learners=set(ldr.learners)
+                                       | {victim.id}))
+    assert res.ok
+    victim.restart(wipe_disk=True, rejoin_as_learner=True)
+
+
+def test_wiped_learner_never_votes_before_promotion():
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    for i in range(5):
+        assert run(c, ldr.client_write("k", i)).ok
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    wipe_and_demote(c, ldr, victim)
+    # freshly wiped: empty log, forced-learner, zero voting power
+    assert victim.is_learner()
+    reply = victim._handle_vote(
+        0, RequestVote(victim.term + 1, 0, 10_000, victim.term + 1))
+    assert not reply.granted
+    assert victim.id not in ldr.config           # demoted from the quorum
+    assert ldr.majority() == 2                   # of voters {ldr, other}
+    settle(c, 1.5)                               # catch up + auto-promote
+    assert victim.id in ldr.config and not victim.is_learner()
+    assert victim.data.get("k") == [0, 1, 2, 3, 4]
+    reply = victim._handle_vote(
+        0, RequestVote(victim.term + 1, 0, 10_000, victim.term + 1))
+    assert reply.granted                         # full member again
+
+
+def test_wiped_learner_match_index_clamped_before_recount():
+    """Leader-side: a wiped node's stale match_index must be clamped on
+    first contact, so its lost log is never counted toward a commit."""
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    for i in range(5):
+        assert run(c, ldr.client_write("k", i)).ok
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    settle(c, 0.2)
+    m0 = ldr.match_index[victim.id]
+    assert m0 >= 5
+    victim.restart(wipe_disk=True, rejoin_as_learner=True)
+    # step the loop until the leader's record first moves: the move must
+    # be DOWN (the failure reply carries the wiped node's last log index)
+    deadline = c.loop.now + 1.0
+    while ldr.match_index.get(victim.id) == m0 and c.loop.now < deadline:
+        c.loop._step()
+    assert ldr.match_index[victim.id] == 0
+    settle(c, 1.0)                               # then it regrows honestly
+    assert ldr.match_index[victim.id] >= m0
+
+
+def test_forced_learner_ignores_stale_voter_configs():
+    """Old CONFIG entries (listing the wiped node as a voter, from a
+    pre-wipe membership stint) re-arrive during catch-up; the forced-
+    learner flag must hold through them. Content-based clearing can't
+    tell that old stint's configs from the post-wipe demotion — the flag
+    only clears once the log provably covers the cluster commit point."""
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    new = c.spawn_node(3, raft, learner=True)
+    assert run(c, ldr.change_membership(set(ldr.config),
+                                        learners={3})).ok
+    settle(c, 1.0)
+    assert 3 in ldr.config                       # promoted: config history
+    victim = new                                 # has voter CONFIG for 3
+    wipe_and_demote(c, ldr, victim)
+    assert victim._forced_learner
+    # replay the stale prefix by hand: first its own add-as-learner
+    # CONFIG, then its old promote-to-voter CONFIG — neither may clear
+    # the flag while the log still trails the commit point
+    prefix = ldr.log[1:]
+    demote_at = max(i for i, e in enumerate(ldr.log)
+                    if e.key == CONFIG and 3 in parse_config(e.value)[1])
+    stale = prefix[:demote_at - 1]               # everything pre-demotion
+    victim._handle_append(ldr.id, AppendEntries(
+        victim.term, ldr.id, 0, 0, stale, ldr.commit_index))
+    assert victim._forced_learner                # stale voter config ignored
+    assert victim.is_learner()                   # despite config saying voter
+    reply = victim._handle_vote(
+        0, RequestVote(victim.term + 1, 0, 10_000, victim.term + 1))
+    assert not reply.granted
+    # the rest of the log arrives and commit coverage is proven: the
+    # flag clears, and the (current) config — learner — takes over
+    victim._handle_append(ldr.id, AppendEntries(
+        victim.term, ldr.id, len(stale), stale[-1].term,
+        prefix[len(stale):], ldr.commit_index))
+    assert not victim._forced_learner
+    assert victim.is_learner()                   # now by config, not fiat
+
+
+def test_append_failure_reply_carries_last_log_index():
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    f = next(n for n in c.nodes.values() if n is not ldr)
+    settle(c, 0.2)
+    last = f.last_log_index
+    reply = f._handle_append(ldr.id, AppendEntries(
+        f.term, ldr.id, last + 50, f.term, [], 0))
+    assert not reply.success and reply.match_index == last

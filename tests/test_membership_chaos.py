@@ -1,0 +1,132 @@
+"""Membership churn under fire: scheduled add/promote/remove chaos and
+the safe disk-loss rejoin, swept against the consistency-policy registry
+with the linearizability oracle (property-based via the hypothesis stub
+fallback)."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fixed-example fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (LinearizabilityError, RaftParams, ReadMode, SimParams,
+                        check_linearizability, run_workload)
+from repro.faults import (CrashRestart, MembershipChaos, DiskLossRejoin,
+                          PartialPartition, Scenario, Window, build_scenario,
+                          random_membership_scenario, safe_scenario_names)
+
+
+def churn_run(mode, scenario, seed, *, follower_frac=0.0):
+    raft = RaftParams(read_mode=mode, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6, rpc_timeout=0.15)
+    sim = SimParams(seed=seed, sim_duration=1.2, interarrival=3e-3,
+                    follower_read_fraction=follower_frac)
+    if isinstance(scenario, str):
+        scenario = build_scenario(scenario)
+    return run_workload(raft, sim, fault_script=scenario.install,
+                        check=False, settle_time=1.5)
+
+
+def test_membership_scenarios_are_registered_safe():
+    names = set(safe_scenario_names())
+    assert {"membership_churn", "membership_churn_crash",
+            "membership_churn_partition", "disk_loss_safe"} <= names
+
+
+# ------------------------------------------------ named deterministic cases
+@pytest.mark.parametrize("mode", [ReadMode.LEASEGUARD, ReadMode.READ_INDEX,
+                                  ReadMode.QUORUM],
+                         ids=["leaseguard", "readindex", "quorum"])
+def test_learner_promotion_mid_partition(mode):
+    """A learner joins and gets promoted while a partial partition is
+    up — the CONFIG entries must still commit through real quorums."""
+    sc = Scenario("promote_mid_partition", [
+        Window(MembershipChaos(period=0.25, adds=2, removes=0), at=0.15,
+               until=1.0),
+        Window(PartialPartition(), at=0.2, until=0.9),
+    ])
+    res = churn_run(mode, sc, seed=13)
+    assert check_linearizability(res.history) > 0
+    assert any("learner" in ev for _, ev in sc.ctx.trace)
+
+
+@pytest.mark.parametrize("mode", [ReadMode.LEASEGUARD, ReadMode.READ_INDEX,
+                                  ReadMode.QUORUM],
+                         ids=["leaseguard", "readindex", "quorum"])
+def test_remove_then_crash(mode):
+    """A voter is removed (and decommissioned); shortly after, the
+    leader crashes. The shrunken config must elect cleanly."""
+    sc = Scenario("remove_then_crash", [
+        Window(MembershipChaos(period=0.2, adds=0, removes=1), at=0.2,
+               until=0.6),
+        Window(CrashRestart(scope="leader", downtime=0.3), at=0.55),
+    ])
+    res = churn_run(mode, sc, seed=17)
+    assert check_linearizability(res.history) > 0
+    assert any("removed voter" in ev for _, ev in sc.ctx.trace)
+
+
+@pytest.mark.parametrize("mode", [ReadMode.LEASEGUARD, ReadMode.READ_INDEX,
+                                  ReadMode.QUORUM],
+                         ids=["leaseguard", "readindex", "quorum"])
+def test_wipe_then_learner_rejoin(mode):
+    """The safe disk-loss protocol end-to-end: crash, demote-while-down,
+    wiped restart as forced learner, catch up, promote."""
+    sc = build_scenario("disk_loss_safe")
+    res = churn_run(mode, sc, seed=5)
+    assert check_linearizability(res.history) > 0
+    assert any("demoted wiped node" in ev for _, ev in sc.ctx.trace)
+    assert any("wiped learner" in ev for _, ev in sc.ctx.trace)
+
+
+def test_wiped_node_stays_nonvoting_until_promoted():
+    """Scenario-level version of the acceptance criterion: while the
+    wiped node is catching up it is a learner everywhere — no vote
+    grants, no majority contribution."""
+    from repro.core import build_cluster
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6, rpc_timeout=0.15)
+    c = build_cluster(raft, SimParams(seed=5))
+    ldr = c.wait_for_leader()
+    run = lambda coro: c.loop.run_until_complete(c.loop.create_task(coro))
+    for i in range(10):
+        assert run(ldr.client_write("k", i)).ok
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    victim.crash()
+    assert run(ldr.change_membership(
+        set(ldr.config) - {victim.id},
+        learners=set(ldr.learners) | {victim.id})).ok
+    victim.restart(wipe_disk=True, rejoin_as_learner=True)
+    # sample the invariant densely through catch-up and promotion
+    deadline = c.loop.now + 3.0
+    while c.loop.now < deadline:
+        if victim.id not in ldr.config:          # not yet promoted
+            assert victim.is_learner()
+            assert victim.id not in {ldr.id} | set(ldr.config) \
+                or ldr.majority() <= len(ldr.config) // 2 + 1
+            assert ldr.majority() == 2           # voters are the other two
+        c.loop.run_until(c.loop.now + 0.01)
+    assert victim.id in ldr.config               # eventually promoted
+    assert not victim.is_learner()
+
+
+# ------------------------------------------------------ property tests
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_random_membership_churn_keeps_leaseguard_linearizable(seed):
+    sc = random_membership_scenario(seed)
+    res = churn_run(ReadMode.LEASEGUARD, sc, seed=seed % 97)
+    assert check_linearizability(res.history) >= 0
+
+
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from([ReadMode.READ_INDEX, ReadMode.QUORUM]))
+@settings(max_examples=6, deadline=None)
+def test_random_membership_churn_keeps_other_policies_linearizable(seed, mode):
+    sc = random_membership_scenario(seed + 4242)
+    res = churn_run(mode, sc, seed=seed % 89)
+    assert check_linearizability(res.history) >= 0

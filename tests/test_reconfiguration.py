@@ -5,7 +5,7 @@ composes with leases. Elastic scaling for the coordinator."""
 import pytest
 
 from repro.core import RaftParams, SimParams, build_cluster
-from repro.core.raft import CONFIG
+from repro.core.raft import CONFIG, NOOP, AppendEntries, LogEntry
 
 
 def make(**kw):
@@ -84,6 +84,57 @@ def test_lease_reads_work_through_reconfig():
     res = run(c, ldr.client_read("k"))
     assert res.ok and res.value == [1]
     assert c.net.messages_sent == before     # still zero roundtrips
+
+
+def test_truncated_config_reverts_to_seed_membership():
+    """Regression: conflict truncation can delete EVERY config entry from
+    a follower's log (an uncommitted CONFIG from a deposed leader). The
+    follower must fall back to its seed config — keeping the truncated
+    membership would count majorities against a config no surviving log
+    supports."""
+    c, raft = make()
+    ldr = c.wait_for_leader()
+    assert run(c, ldr.client_write("x", 1)).ok
+    f = next(n for n in c.nodes.values() if n is not ldr)
+    settle(c, 0.3)
+    base = f.last_log_index
+    # a deposed leader replicated an uncommitted CONFIG to this follower
+    # only, then vanished
+    f.log.append(LogEntry(f.term, CONFIG, [0, 1, 2, 3],
+                          f.log[base].interval))
+    f._refresh_config()
+    assert f.config == {0, 1, 2, 3}          # newest appended config governs
+    # the real next leader's conflicting suffix truncates it away
+    reply = f._handle_append(ldr.id, AppendEntries(
+        f.term + 1, ldr.id, base, f.log[base].term,
+        [LogEntry(f.term + 1, NOOP, None, f.log[base].interval)],
+        ldr.commit_index))
+    assert reply.success
+    assert not any(e.key == CONFIG for e in f.log)
+    assert f.config == {0, 1, 2}             # seed config restored
+    assert f.majority() == 2
+
+
+def test_removed_peer_replication_state_pruned():
+    """Regression: removing a member must prune the leader's next/match
+    bookkeeping, or stale match_index entries linger across
+    reconfigurations (and their heartbeat loops leak)."""
+    c, raft = make(n_nodes=5)
+    ldr = c.wait_for_leader()
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    assert victim.id in ldr.next_index and victim.id in ldr.match_index
+    assert run(c, ldr.change_membership(set(ldr.config) - {victim.id})).ok
+    assert victim.id not in ldr.next_index
+    assert victim.id not in ldr.match_index
+    # bookkeeping tracks exactly the replication set after further churn
+    new = c.spawn_node(5, raft, learner=True)
+    assert run(c, ldr.change_membership(
+        set(ldr.config), learners=set(ldr.learners) | {5})).ok
+    settle(c, 1.0)
+    assert 5 in ldr.config                   # auto-promoted
+    assert set(ldr.next_index) == {p for p in ldr.config if p != ldr.id}
+    assert set(ldr.match_index) == set(ldr.next_index)
+    assert new.data == ldr.data
 
 
 def test_reconfig_survives_leader_failover():

@@ -86,12 +86,15 @@ def run_cell(policy: str, scenario_name: str, seed: int,
              warm_start: bool = False) -> dict:
     """One deterministic run; returns a JSON-ready row."""
     flags, sim_flags = split_bench_config(policy_configs()[policy])
+    sc = build_scenario(scenario_name)
+    # a scenario may require RaftParams flags for its expect_safe
+    # classification (corruption tier: entry_checksums); scenarios with
+    # no overrides build the exact historical params
     raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
                       heartbeat_interval=0.03, lease_duration=0.6,
-                      rpc_timeout=0.15, **flags)
+                      rpc_timeout=0.15, **{**flags, **sc.raft_overrides})
     sim = SimParams(seed=seed, sim_duration=SIM_DURATION, interarrival=3e-3,
                     write_fraction=1 / 3, **sim_flags)
-    sc = build_scenario(scenario_name)
     res = run_workload(raft, sim, fault_script=sc.install, check=False,
                        settle_time=SETTLE_TIME, warm_start=warm_start)
     try:
@@ -135,11 +138,22 @@ def _cell_args(policies, scenarios, seeds, warm_start=False):
 def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
                jobs: int = 1, progress: bool = True,
                warm_start: bool = False) -> list[dict]:
+    """Run the cube; byte-identical output for any ``jobs``.
+
+    Parallel runs shard the canonical cell list round-robin (cell i ->
+    shard i mod jobs), each worker runs its shard in order, and the
+    shards are de-interleaved back into canonical cell order before the
+    final canonical sort — every cell is an independent deterministic
+    simulation, so only ordering could differ, and ordering is pinned."""
     cells = _cell_args(policies, scenarios, seeds, warm_start)
     if jobs > 1:
         from concurrent.futures import ProcessPoolExecutor
+        shards = [cells[k::jobs] for k in range(jobs)]
         with ProcessPoolExecutor(max_workers=jobs) as ex:
-            rows = list(ex.map(_run_cell_star, cells, chunksize=8))
+            shard_rows = list(ex.map(_run_shard, shards))
+        # ordered merge: undo the round-robin interleave
+        iters = [iter(sr) for sr in shard_rows]
+        rows = [next(iters[i % jobs]) for i in range(len(cells))]
     else:
         rows = []
         for i, cell in enumerate(cells):
@@ -150,8 +164,8 @@ def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
     return rows
 
 
-def _run_cell_star(args) -> dict:
-    return run_cell(*args)
+def _run_shard(cells) -> list[dict]:
+    return [run_cell(*cell) for cell in cells]
 
 
 def summarize(rows: list[dict]) -> list[dict]:
@@ -255,8 +269,12 @@ def main(argv=None) -> list[dict]:
     if args.include_unsafe:
         scenarios = scenarios + unsafe_scenario_names()
     if args.smoke:
+        # one scenario per failure-model tier rides in CI on every push:
+        # crash-stop (crash, split, churn, disk loss), gray (flapping),
+        # corruption (checksummed)
         scenarios = ["leader_crash_restart", "majority_minority",
-                     "membership_churn", "disk_loss_safe"]
+                     "membership_churn", "disk_loss_safe",
+                     "flapping_node", "corrupt_entries_checked"]
         policies = ["leaseguard", "quorum"]
         seeds = list(range(5))
     if args.scenarios:

@@ -1,0 +1,277 @@
+"""Gray-failure resilience matrix: {prevote, check_quorum, backoff} on/off
+under the gray + corruption scenario tiers.
+
+For each resilience variant x gray scenario x seed, runs the flagship
+LeaseGuard policy and records the protocol counters the features exist
+to move: term consumption (a flapping node's election storms), leader
+evictions while the deposed leader could still reach a quorum (lease
+churn from disruptive elections), checksum drops, and the read/write
+availability timeline. Writes ``BENCH_gray_matrix.json`` at the repo
+root — the headline artifact showing PreVote + CheckQuorum measurably
+reduce term inflation and healthy-leader evictions versus the same
+seeds with the features off, at zero linearizability violations.
+
+Variants (all on top of the stock matrix RaftParams):
+
+* ``off``        — everything disabled: today's defaults
+* ``prevote``    — PreVote only
+* ``check_quorum`` — CheckQuorum only
+* ``backoff``    — adaptive replication backoff only
+* ``all``        — the full resilience tier
+
+Usage:
+    python benchmarks/gray_matrix.py [--seeds N] [--smoke] [--jobs N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (LinearizabilityError, RaftParams, SimParams,  # noqa: E402
+                        check_linearizability, run_workload,
+                        throughput_timeline)
+from repro.faults import build_scenario  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_gray_matrix.json"
+SMOKE_OUT_PATH = REPO_ROOT / "BENCH_gray_matrix_smoke.json"
+
+#: the resilience flag sets under comparison
+VARIANTS: dict[str, dict] = {
+    "off": {},
+    "prevote": {"prevote": True},
+    "check_quorum": {"check_quorum": True},
+    "backoff": {"replication_backoff": True},
+    "all": {"prevote": True, "check_quorum": True,
+            "replication_backoff": True},
+}
+
+#: the gray + corruption safe tier (every scenario here must stay
+#: violation-free for LeaseGuard under every variant)
+GRAY_SCENARIOS = [
+    "slow_follower", "slow_leader", "flapping_node", "flapping_outbound",
+    "gray_combo", "corrupt_entries_checked", "corrupt_storm_checked",
+]
+
+POLICY = "leaseguard"
+DEFAULT_SEEDS = 10
+SIM_DURATION = 1.2
+SETTLE_TIME = 1.5
+TIMELINE_BIN = 0.1
+
+
+def run_cell(variant: str, scenario_name: str, seed: int) -> dict:
+    """One deterministic run; returns a JSON-ready row."""
+    sc = build_scenario(scenario_name)
+    raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6,
+                      rpc_timeout=0.15,
+                      **{**VARIANTS[variant], **sc.raft_overrides})
+    sim = SimParams(seed=seed, sim_duration=SIM_DURATION, interarrival=3e-3,
+                    write_fraction=1 / 3)
+    res = run_workload(raft, sim, fault_script=sc.install, check=False,
+                       settle_time=SETTLE_TIME)
+    try:
+        checked = check_linearizability(res.history)
+        violation = None
+    except LinearizabilityError as e:
+        checked = 0
+        violation = str(e)[:200]
+    ok = res.reads_ok + res.writes_ok
+    fail = res.reads_fail + res.writes_fail
+    bins = throughput_timeline(res.history, TIMELINE_BIN, res.t_start,
+                               res.t_start + SIM_DURATION + SETTLE_TIME)
+    return {
+        "variant": variant,
+        "scenario": scenario_name,
+        "seed": seed,
+        "ops_ok": ok,
+        "ops_fail": fail,
+        "availability": round(ok / max(1, ok + fail), 4),
+        "checked_ops": checked,
+        "violation": violation,
+        **res.raft_stats,
+        "timeline": {
+            "bin_size": TIMELINE_BIN,
+            "t0": round(res.t_start, 9),
+            "ok": [b["reads"] + b["writes"] for b in bins],
+            "fail": [b["read_fail"] + b["write_fail"] for b in bins],
+        },
+    }
+
+
+def run_matrix(variants: list[str], scenarios: list[str], seeds: list[int],
+               jobs: int = 1, progress: bool = True) -> list[dict]:
+    """Same deterministic round-robin sharding + ordered merge as
+    ``fault_matrix.run_matrix``: byte-identical output for any ``jobs``."""
+    cells = [(v, s, seed) for v in variants for s in scenarios
+             for seed in seeds]
+    if jobs > 1:
+        from concurrent.futures import ProcessPoolExecutor
+        shards = [cells[k::jobs] for k in range(jobs)]
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            shard_rows = list(ex.map(_run_shard, shards))
+        iters = [iter(sr) for sr in shard_rows]
+        rows = [next(iters[i % jobs]) for i in range(len(cells))]
+    else:
+        rows = []
+        for i, cell in enumerate(cells):
+            rows.append(run_cell(*cell))
+            if progress and (i + 1) % 25 == 0:
+                print(f"# {i + 1}/{len(cells)} cells", file=sys.stderr)
+    rows.sort(key=lambda r: (r["variant"], r["scenario"], r["seed"]))
+    return rows
+
+
+def _run_shard(cells) -> list[dict]:
+    return [run_cell(*cell) for cell in cells]
+
+
+def summarize(rows: list[dict]) -> list[dict]:
+    """Per (variant, scenario): the resilience metrics, seed-aggregated."""
+    agg: dict[tuple[str, str], dict] = {}
+    for r in rows:
+        a = agg.setdefault((r["variant"], r["scenario"]), {
+            "variant": r["variant"], "scenario": r["scenario"], "seeds": 0,
+            "violations": 0, "ops_ok": 0, "ops_fail": 0, "max_term": 0,
+            "elections_started": 0, "leader_evictions": 0,
+            "healthy_evictions": 0, "quorum_step_downs": 0,
+            "checksum_drops": 0,
+        })
+        a["seeds"] += 1
+        a["violations"] += 1 if r["violation"] else 0
+        a["ops_ok"] += r["ops_ok"]
+        a["ops_fail"] += r["ops_fail"]
+        a["max_term"] += r["max_term"]
+        for k in ("elections_started", "leader_evictions",
+                  "healthy_evictions", "quorum_step_downs",
+                  "checksum_drops"):
+            a[k] += r[k]
+    out = []
+    for key in sorted(agg):
+        a = agg[key]
+        a["mean_max_term"] = round(a.pop("max_term") / a["seeds"], 2)
+        a["availability"] = round(
+            a["ops_ok"] / max(1, a["ops_ok"] + a["ops_fail"]), 4)
+        out.append(a)
+    return out
+
+
+def headline(summary: list[dict]) -> dict:
+    """The artifact's claim, made machine-checkable: total term
+    consumption and healthy-leader evictions across the gray tier,
+    ``off`` vs ``all`` on the same seeds."""
+    tot = {v: {"terms": 0.0, "healthy_evictions": 0, "violations": 0}
+           for v in ("off", "all")}
+    for s in summary:
+        if s["variant"] in tot:
+            tot[s["variant"]]["terms"] += s["mean_max_term"]
+            tot[s["variant"]]["healthy_evictions"] += s["healthy_evictions"]
+            tot[s["variant"]]["violations"] += s["violations"]
+    return {
+        "off": tot["off"],
+        "all": tot["all"],
+        "term_inflation_reduced": tot["all"]["terms"] < tot["off"]["terms"],
+        "healthy_evictions_reduced":
+            tot["all"]["healthy_evictions"]
+            <= tot["off"]["healthy_evictions"],
+    }
+
+
+class GrayMatrixError(AssertionError):
+    """The gray matrix contract failed: a violation under a safe gray/
+    corruption scenario, or the resilience tier failed to reduce term
+    inflation / healthy-leader evictions."""
+
+
+def run(quick: bool = False) -> list[dict]:
+    """benchmarks.run entry point: full matrix, or the CI smoke slice."""
+    return main(["--smoke"] if quick else [])
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=DEFAULT_SEEDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI slice: off/all x 2 scenarios x 3 seeds")
+    ap.add_argument("--jobs", type=int,
+                    default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    variants = list(VARIANTS)
+    scenarios = list(GRAY_SCENARIOS)
+    seeds = list(range(args.seeds))
+    if args.smoke:
+        variants = ["off", "all"]
+        scenarios = ["flapping_node", "corrupt_entries_checked"]
+        seeds = list(range(3))
+    full_cube = not args.smoke and args.seeds >= DEFAULT_SEEDS
+    out_path = args.out or str(OUT_PATH if full_cube else SMOKE_OUT_PATH)
+
+    n = len(variants) * len(scenarios) * len(seeds)
+    print(f"# gray matrix: {len(variants)} variants x {len(scenarios)} "
+          f"scenarios x {len(seeds)} seeds = {n} cells (jobs={args.jobs})",
+          file=sys.stderr)
+    rows = run_matrix(variants, scenarios, seeds, jobs=args.jobs)
+    summary = summarize(rows)
+    head = headline(summary)
+
+    artifact = {
+        "policy": POLICY,
+        "variants": {v: VARIANTS[v] for v in variants},
+        "scenarios": scenarios,
+        "seeds": seeds,
+        "headline": head,
+        "summary": summary,
+        "cells": rows,
+    }
+    Path(out_path).write_text(json.dumps(artifact, indent=2, sort_keys=True)
+                              + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+    for s in summary:
+        print(f"{s['variant']:13s} {s['scenario']:26s} "
+              f"viol={s['violations']:2d} term={s['mean_max_term']:6.2f} "
+              f"evict={s['leader_evictions']:3d} "
+              f"healthy_evict={s['healthy_evictions']:3d} "
+              f"drops={s['checksum_drops']:4d} "
+              f"avail={s['availability']:.3f}")
+
+    bad = [r for r in rows if r["violation"]]
+    if bad:
+        msg = (f"{len(bad)} linearizability violations under safe "
+               f"gray/corruption scenarios")
+        print(f"\nFAIL: {msg}", file=sys.stderr)
+        for r in bad[:10]:
+            print(f"  {r['variant']} / {r['scenario']} / seed {r['seed']}: "
+                  f"{r['violation']}", file=sys.stderr)
+        raise GrayMatrixError(msg)
+    if not args.smoke:
+        if not head["term_inflation_reduced"]:
+            raise GrayMatrixError(
+                f"resilience tier failed to reduce term inflation: "
+                f"off={head['off']['terms']} all={head['all']['terms']}")
+        if not head["healthy_evictions_reduced"]:
+            raise GrayMatrixError(
+                "resilience tier failed to reduce healthy-leader "
+                f"evictions: off={head['off']['healthy_evictions']} "
+                f"all={head['all']['healthy_evictions']}")
+    print(f"\n# zero violations; off->all terms "
+          f"{head['off']['terms']:.1f}->{head['all']['terms']:.1f}, "
+          f"healthy evictions {head['off']['healthy_evictions']}->"
+          f"{head['all']['healthy_evictions']}")
+    return summary
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except GrayMatrixError:
+        sys.exit(1)

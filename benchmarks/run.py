@@ -20,7 +20,8 @@ from repro.consistency import benchmark_configs, split_bench_config
 from repro.core import RaftParams, SimParams, run_workload
 
 from . import (fault_matrix, fig5_lease_duration, fig6_latency,
-               fig7_availability, fig8_skewness, fig11_scalability, simperf)
+               fig7_availability, fig8_skewness, fig11_scalability,
+               gray_matrix, simperf)
 from .common import emit
 
 MATRIX_SEED = 42
@@ -78,6 +79,9 @@ FIGS = {
     # policy x scenario x seed nemesis sweep -> BENCH_fault_matrix.json
     # (--quick runs the CI smoke slice)
     "fault_matrix": fault_matrix.run,
+    # resilience-variant x gray/corruption scenario sweep ->
+    # BENCH_gray_matrix.json (--quick runs the CI smoke slice)
+    "gray_matrix": gray_matrix.run,
     # simulator wall-time baseline -> BENCH_simperf.json
     # (--quick runs the smoke slice and checks for >30% regression)
     "simperf": simperf.run,

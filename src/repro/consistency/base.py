@@ -82,6 +82,12 @@ class ConsistencyPolicy:
         """Called on every successful AppendEntries ack; ``sent_at`` is the
         simulated time the RPC was issued (Ongaro's lease input)."""
 
+    def on_quorum_lost(self) -> None:
+        """Called just before a CheckQuorum step-down: the leader could
+        not reach a voting majority within an election timeout and is
+        about to relinquish leadership (and with it, serving its lease).
+        Policies drop any leader-local serving state here."""
+
     def on_message(self, src: int, msg: Any) -> Any:
         """Handle a policy-specific RPC; return the reply or None."""
         return None
@@ -146,8 +152,7 @@ class ConsistencyPolicy:
         are still the same-term leader (Raft's read barrier)."""
         n = self.node
         term0 = n.term
-        msg = AppendEntries(n.term, n.id, n.last_log_index, n.log[-1].term,
-                            [], n.commit_index)
+        msg = n._make_append(n.last_log_index, [], n.commit_index)
         futs = [n.net.call(n.id, p, msg) for p in n.peers]
         acks = 1
         for f in futs:

@@ -98,6 +98,17 @@ class LeaseGuardPolicy(ConsistencyPolicy):
         if self.limbo_keys and n.log[n.commit_index].term == n.term:
             self.limbo_keys = set()  # own-term commit ends limbo
 
+    def holds_lease(self) -> bool:
+        """Invariant probe (tests only): could this node serve a local read
+        right now, ignoring limbo keys? True iff it is the leader and the
+        newest committed entry's lease is still valid under its own
+        bounded-uncertainty clock. Safety demands this is never
+        simultaneously true on two nodes."""
+        n = self.node
+        return (n.alive and n.is_leader()
+                and n.clock.lease_valid(n.log[n.commit_index].interval,
+                                        n.p.delta))
+
     # -------------------------------------------------------------- read gate
     def _read_barrier(self, key: str) -> str:
         """Lease + limbo checks; non-empty string = reject reason."""

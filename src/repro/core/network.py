@@ -72,6 +72,7 @@ class MessageFault:
 class Network:
     __slots__ = ("loop", "prng", "params", "_handlers", "_cut", "_down",
                  "_io_busy_until", "_io_slow", "_faults", "_fault_seq",
+                 "_intercept", "_intercept_seq",
                  "_rpc_seq", "_pending", "_reaps", "messages_sent",
                  "bytes_sent", "messages_delivered", "messages_dropped",
                  "_lat_mu", "_lat_sigma")
@@ -87,6 +88,12 @@ class Network:
         self._io_slow: dict[int, float] = {}      # per-node extra service time
         self._faults: dict[int, MessageFault] = {}
         self._fault_seq = 0
+        # delivery interceptors: fn(src, dst, msg) -> msg' (possibly a
+        # mutated copy) or None to drop. Applied at delivery time to both
+        # requests and replies; with none installed the delivery path is
+        # untouched (zero extra PRNG draws).
+        self._intercept: dict[int, Callable[[int, int, Any], Any]] = {}
+        self._intercept_seq = 0
         self._rpc_seq = 0
         self._pending: dict[int, Future] = {}
         self._reaps: dict[int, "Timer"] = {}      # rid -> pending-reap timer
@@ -151,6 +158,24 @@ class Network:
 
     def remove_fault(self, handle: int) -> None:
         self._faults.pop(handle, None)
+
+    def add_interceptor(self, fn: Callable[[int, int, Any], Any]) -> int:
+        """Install a delivery interceptor ``fn(src, dst, msg) -> msg|None``;
+        returning a different object substitutes it (field-level corruption),
+        returning None drops the message. Returns a removal handle."""
+        self._intercept_seq += 1
+        self._intercept[self._intercept_seq] = fn
+        return self._intercept_seq
+
+    def remove_interceptor(self, handle: int) -> None:
+        self._intercept.pop(handle, None)
+
+    def _apply_interceptors(self, src: int, dst: int, msg: Any) -> Any:
+        for handle in sorted(self._intercept):
+            msg = self._intercept[handle](src, dst, msg)
+            if msg is None:
+                return None
+        return msg
 
     def set_io_slowdown(self, node_id: int, extra_service_time: float) -> None:
         """Extra per-message I/O service time for one node (0 clears)."""
@@ -246,8 +271,14 @@ class Network:
             handler = self._handlers.get(dst)
             if handler is None:
                 return
+            m = msg
+            if self._intercept:
+                m = self._apply_interceptors(src, dst, m)
+                if m is None:
+                    self.messages_dropped += 1
+                    return
             self.messages_delivered += 1
-            reply = handler(src, msg)
+            reply = handler(src, m)
             if reply_to is not None and reply is not None:
                 # reply travels back with its own I/O + network delay (and
                 # is subject to the same loss/duplication faults)
@@ -256,13 +287,19 @@ class Network:
                         if not self.reachable(dst, src):
                             self.messages_dropped += 1
                             return
+                        r = reply
+                        if self._intercept:
+                            r = self._apply_interceptors(dst, src, r)
+                            if r is None:
+                                self.messages_dropped += 1
+                                return
                         fut = self._pending.pop(reply_to, None)
                         timer = self._reaps.pop(reply_to, None)
                         if timer is not None:
                             timer.cancel()
                         if fut is not None and not fut.done():
                             self.messages_delivered += 1
-                            fut.set_result(reply)
+                            fut.set_result(r)
 
                     self.loop.call_later(rdelay, deliver_reply)
 

@@ -39,6 +39,27 @@ class RaftParams:
     # membership: the leader's replication loop promotes a learner to
     # voter (one CONFIG entry) once its match_index covers commitIndex
     auto_promote_learners: bool = True
+    # --- gray-failure resilience (all OFF by default: every committed
+    # artifact replays bit-identically, and the disabled code paths make
+    # no PRNG draws) ---
+    # PreVote: a would-be candidate polls a majority with a trial
+    # (non-term-bumping) vote before incrementing its term, so a flapping
+    # node cannot inflate terms and evict a healthy lease-holding leader
+    prevote: bool = False
+    # CheckQuorum: a leader that has not heard from a voting majority
+    # within an election timeout steps down (and stops serving its lease)
+    # instead of serving a doomed lease window
+    check_quorum: bool = False
+    # capped exponential backoff + jitter on per-peer AppendEntries RPC
+    # timeouts, replacing the fixed rpc_timeout hot-loop against
+    # slow/dead peers
+    replication_backoff: bool = False
+    backoff_base: float = 0.02       # first retry delay after a timeout
+    backoff_max: float = 0.5         # cap on the exponential growth
+    # end-to-end checksums on AppendEntries (header digest + per-entry
+    # checksums): corrupted messages are detected and dropped instead of
+    # applied (the corruption nemesis tier's defense)
+    entry_checksums: bool = False
     # clocks (paper §2.2; AWS clock-bound preset is 50 µs)
     max_clock_error: float = 50e-6
     # client-visible timeouts

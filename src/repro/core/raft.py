@@ -24,6 +24,7 @@ The policy hook points in this file:
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -45,6 +46,7 @@ class LogEntry:
     value: Any
     interval: TimeInterval         # intervalNow() on the writing leader
     execution_ts: Optional[float] = None  # true time committed+applied on leader
+    checksum: Optional[int] = None  # content checksum (RaftParams.entry_checksums)
 
     @property
     def is_control(self) -> bool:
@@ -74,6 +76,38 @@ class AppendEntries:
     prev_term: int
     entries: list
     leader_commit: int
+    checksum: Optional[int] = None  # end-to-end digest (entry_checksums)
+
+
+@dataclass(slots=True)
+class PreVoteRequest:
+    """Trial vote for ``term`` (= candidate's term + 1) that bumps NO
+    term anywhere (Raft thesis §9.6): the candidate only campaigns for
+    real once a majority signals it would win."""
+    term: int
+    candidate: int
+    last_log_index: int
+    last_log_term: int
+
+
+@dataclass(slots=True)
+class PreVoteReply:
+    term: int
+    granted: bool
+
+
+def entry_checksum(term: int, key: str, value: Any) -> int:
+    """Content checksum for one log entry (stable across replicas)."""
+    return zlib.crc32(repr((term, key, value)).encode())
+
+
+def append_digest(msg: "AppendEntries") -> int:
+    """End-to-end digest over an AppendEntries' header fields and its
+    entries' checksums — any in-flight field mutation breaks it."""
+    return zlib.crc32(repr(
+        (msg.term, msg.leader, msg.prev_index, msg.prev_term,
+         msg.leader_commit, tuple(e.checksum for e in msg.entries))
+    ).encode())
 
 
 @dataclass(slots=True)
@@ -137,7 +171,10 @@ class Node:
         "last_index_at_election", "leader_hint", "_leader_epoch",
         "_last_heartbeat", "_cond", "_new_entries", "policy",
         "freeze_commit_broadcast", "_frozen_commit", "_timer_gen",
-        "_election_sleep",
+        "_election_sleep", "_last_peer_ack", "_backoff_fails",
+        "_backoff_sleep", "elections_started", "prevote_rounds",
+        "leader_evictions", "healthy_evictions", "quorum_step_downs",
+        "checksum_drops",
     )
 
     def __init__(self, node_id: int, loop: EventLoop, net: Network,
@@ -203,6 +240,22 @@ class Node:
         self.freeze_commit_broadcast = False
         self._frozen_commit = 0
 
+        # gray-failure resilience state. _last_peer_ack feeds CheckQuorum
+        # (and the healthy-eviction counter) from every AppendEntries
+        # reply; the backoff dicts pace per-peer retries when
+        # replication_backoff is on. All maintained without PRNG draws.
+        self._last_peer_ack: dict[int, float] = {}
+        self._backoff_fails: dict[int, int] = {}
+        self._backoff_sleep: dict[int, tuple] = {}   # peer -> (future, timer)
+        # instrumentation for the gray matrix (term-inflation and
+        # lease-churn evidence); counting never changes behavior
+        self.elections_started = 0   # real (term-bumping) campaigns
+        self.prevote_rounds = 0      # trial rounds issued
+        self.leader_evictions = 0    # deposed by a higher term while leading
+        self.healthy_evictions = 0   # ... while still reaching a quorum
+        self.quorum_step_downs = 0   # voluntary CheckQuorum step-downs
+        self.checksum_drops = 0      # corrupted AppendEntries dropped
+
         # bumps on every crash/restart so a timer task from a previous
         # incarnation exits instead of running alongside the new one
         self._timer_gen = 0
@@ -265,6 +318,12 @@ class Node:
             for p in old - new:
                 self.next_index.pop(p, None)
                 self.match_index.pop(p, None)
+                # a backoff park pending for a pruned peer must be
+                # cancelled/reaped, not left to fire into next_index for
+                # a ghost peer (its _replicate task wakes, sees the peer
+                # gone, and exits)
+                self._backoff_fails.pop(p, None)
+                self._wake_backoff(p)
             for p in new - old:
                 if p not in self.next_index and p != self.id:
                     self.next_index[p] = self.last_log_index + 1
@@ -294,6 +353,9 @@ class Node:
         self._timer_gen += 1
         self.net.set_down(self.id, True)
         self._wake_election_timer()
+        for p in list(self._backoff_sleep):
+            self._wake_backoff(p)       # parked retries exit via the guard
+        self._backoff_fails.clear()
         self._signal()
 
     def _wake_election_timer(self) -> None:
@@ -308,6 +370,25 @@ class Node:
             timer.cancel()
             if not f.done():
                 f.set_result(None)
+
+    def _wake_backoff(self, peer: int) -> None:
+        """Lazy-cancel a parked replication-backoff sleep (same scheme as
+        the election timer): the heap entry is reaped, the waiting
+        _replicate task wakes now, re-checks membership, and exits."""
+        parked = self._backoff_sleep.pop(peer, None)
+        if parked is not None:
+            f, timer = parked
+            timer.cancel()
+            if not f.done():
+                f.set_result(None)
+
+    async def _backoff_park(self, peer: int, delay: float) -> None:
+        f = Future(self.loop)
+        timer = self.loop.call_later_cancelable(delay, f._wake)
+        self._backoff_sleep[peer] = (f, timer)
+        await f
+        if self._backoff_sleep.get(peer, (None,))[0] is f:
+            del self._backoff_sleep[peer]
 
     def restart(self, wipe_disk: bool = False,
                 rejoin_as_learner: bool = False) -> None:
@@ -354,16 +435,33 @@ class Node:
             return self._handle_vote(src, msg)
         if isinstance(msg, AppendEntries):
             return self._handle_append(src, msg)
+        if isinstance(msg, PreVoteRequest):
+            return self._handle_prevote(src, msg)
         return self.policy.on_message(src, msg)
 
-    def _step_down(self, term: int) -> None:
+    def _step_down(self, term: int, count_eviction: bool = True) -> None:
         if term > self.term:
             self.term = term
             self.voted_for = None
         if self.state != "follower":
+            if self.state == "leader" and count_eviction:
+                # deposed by a higher term; "healthy" if we could still
+                # reach a quorum — the disruptive-election signature
+                # PreVote/CheckQuorum exist to prevent
+                self.leader_evictions += 1
+                if self._quorum_connected():
+                    self.healthy_evictions += 1
             self.state = "follower"
             self._leader_epoch += 1
         self._signal()
+
+    def _quorum_connected(self) -> bool:
+        """Did we hear from a voting majority (incl. ourselves) within
+        the last election timeout? Fed by every AppendEntries reply."""
+        horizon = self.loop.now - self.p.election_timeout
+        live = 1 + sum(1 for p in self.peers
+                       if self._last_peer_ack.get(p, float("-inf")) >= horizon)
+        return live >= self.majority()
 
     def _handle_vote(self, src: int, msg: RequestVote) -> VoteReply:
         if msg.term > self.term:
@@ -386,7 +484,35 @@ class Node:
                 self._last_heartbeat = self.loop.now
         return VoteReply(self.term, granted)
 
-    def _handle_append(self, src: int, msg: AppendEntries) -> AppendEntriesReply:
+    def _handle_prevote(self, src: int, msg: PreVoteRequest) -> PreVoteReply:
+        """Trial vote (thesis §9.6): NEVER bumps our term, never sets
+        voted_for, never resets the election timer — purely advisory.
+        Granted only if the candidate's log is up-to-date AND we have not
+        heard from a live leader within an election timeout, so a healed
+        flapper cannot depose a healthy lease-holding leader, and a
+        partitioned one cannot inflate terms at all."""
+        granted = False
+        if not self.is_learner() and msg.term > self.term:
+            up_to_date = (msg.last_log_term, msg.last_log_index) >= (
+                self.log[-1].term, self.last_log_index)
+            heard_leader = self.state == "leader" or (
+                self.leader_hint is not None
+                and self.loop.now - self._last_heartbeat
+                < self.p.election_timeout)
+            granted = up_to_date and not heard_leader
+        return PreVoteReply(self.term, granted)
+
+    def _handle_append(self, src: int,
+                       msg: AppendEntries) -> Optional[AppendEntriesReply]:
+        if self.p.entry_checksums and (
+                msg.checksum is None or msg.checksum != append_digest(msg)
+                or any(e.checksum != entry_checksum(e.term, e.key, e.value)
+                       for e in msg.entries)):
+            # end-to-end integrity failed: detected-and-dropped before any
+            # state (even our term) is touched. No reply — the sender's
+            # RPC times out and retries with a fresh transmission.
+            self.checksum_drops += 1
+            return None
         if msg.term < self.term:
             return AppendEntriesReply(self.term, False, 0)
         if msg.term > self.term or self.state != "follower":
@@ -398,8 +524,10 @@ class Node:
         # actual log (only possible after a disk wipe — without it the
         # clamp is a no-op, since a matched prefix never shrinks within
         # the leader's term)
-        if msg.prev_index > self.last_log_index or \
+        if msg.prev_index < 0 or msg.prev_index > self.last_log_index or \
                 self.log[msg.prev_index].term != msg.prev_term:
+            # (negative prev_index is only reachable via in-flight field
+            # corruption; honest leaders never send one)
             return AppendEntriesReply(self.term, False, self.last_log_index)
         # append / resolve conflicts
         idx = msg.prev_index
@@ -411,6 +539,15 @@ class Node:
                     config_touched |= any(x.key == CONFIG
                                           for x in self.log[idx:])
                     del self.log[idx:]          # truncate conflicting suffix
+                    # impossible honestly (committed prefixes never
+                    # truncate), but corruption of leader_commit with
+                    # checksums off can leave these pointing past the
+                    # log; clamp so the checker — not an IndexError —
+                    # reports the resulting divergence
+                    if self.commit_index > self.last_log_index:
+                        self.commit_index = self.last_log_index
+                    if self.last_applied > self.last_log_index:
+                        self.last_applied = self.last_log_index
                     self.log.append(e)
                     config_touched |= e.key == CONFIG
             else:
@@ -449,13 +586,60 @@ class Node:
                 self._election_sleep = None
                 continue
             if self.state == "leader" or self.is_learner():
+                if self.state == "leader" and self.p.check_quorum \
+                        and not self._quorum_connected():
+                    # CheckQuorum: no word from a voting majority within
+                    # an election timeout — step down and stop serving
+                    # the lease instead of riding out a doomed lease
+                    # window in which every read/write can only time out
+                    self.quorum_step_downs += 1
+                    self.policy.on_quorum_lost()
+                    self._step_down(self.term, count_eviction=False)
                 # learners never start elections; they just keep waiting
                 self._last_heartbeat = self.loop.now
                 continue
             await self._run_for_election()
 
+    async def _prevote_round(self) -> bool:
+        """One PreVote round: poll the voters with a trial ballot for
+        ``term + 1`` without bumping any term. True = a majority signals
+        the real campaign would win. While partitioned this keeps
+        failing, so a flapping node's term never inflates."""
+        self.prevote_rounds += 1
+        term0 = self.term
+        msg = PreVoteRequest(self.term + 1, self.id, self.last_log_index,
+                             self.log[-1].term)
+        grants = 1
+        futs = [self.net.call(self.id, p, msg) for p in self.peers]
+        for f in futs:
+            try:
+                reply: PreVoteReply = await wait_for(f, self.p.rpc_timeout)
+            except TimeoutError_:
+                continue
+            # abort if circumstances changed mid-round (a vote was
+            # granted, a higher term arrived); a same-term heartbeat
+            # keeps the round alive — peers hearing that leader refuse
+            # anyway. (state may legitimately be "candidate" here: a
+            # node whose previous real election failed retries.)
+            if not self.alive or self.term != term0 \
+                    or self.state == "leader":
+                return False
+            if reply.term > self.term:
+                self._step_down(reply.term)
+                return False
+            if reply.granted:
+                grants += 1
+            if grants >= self.majority():
+                return True
+        return grants >= self.majority()
+
     async def _run_for_election(self) -> None:
+        if self.p.prevote:
+            self._last_heartbeat = self.loop.now  # full timeout before retry
+            if not await self._prevote_round():
+                return                            # stay a quiet follower
         self.term += 1
+        self.elections_started += 1
         term = self.term
         self.state = "candidate"
         self.voted_for = self.id
@@ -486,6 +670,10 @@ class Node:
         self.next_index = {p: self.last_log_index + 1
                            for p in self.replication_peers}
         self.match_index = {p: 0 for p in self.replication_peers}
+        # CheckQuorum grace: a fresh leader gets one full election
+        # timeout before connectivity is judged
+        self._last_peer_ack = {p: self.loop.now for p in self.peers}
+        self._backoff_fails.clear()
         self.last_index_at_election = self.last_log_index
         self.leader_hint = self.id
         self.policy.on_become_leader()
@@ -501,12 +689,26 @@ class Node:
     # ------------------------------------------------------------ leader ops
     def _append_local(self, key: str, value: Any) -> int:
         entry = LogEntry(self.term, key, value, self.clock.interval_now())
+        if self.p.entry_checksums:
+            entry.checksum = entry_checksum(entry.term, entry.key,
+                                            entry.value)
         self.log.append(entry)
         if key == CONFIG:
             self._adopt_config(*parse_config(value))
         self._new_entries.notify_all()
         self._try_advance_commit()   # single-node replica sets commit locally
         return self.last_log_index
+
+    def _make_append(self, prev_index: int, entries: list,
+                     commit: int) -> AppendEntries:
+        """Build an AppendEntries, stamping the end-to-end digest when
+        ``entry_checksums`` is on (every sender — replication loop and
+        policy barriers alike — must go through here)."""
+        msg = AppendEntries(self.term, self.id, prev_index,
+                            self.log[prev_index].term, entries, commit)
+        if self.p.entry_checksums:
+            msg.checksum = append_digest(msg)
+        return msg
 
     async def _replicate(self, peer: int, epoch: int) -> None:
         """Per-follower replication + heartbeat loop (voters AND learners)."""
@@ -520,8 +722,7 @@ class Node:
                 advertised_commit = min(self._frozen_commit, self.commit_index)
             else:
                 advertised_commit = self.commit_index
-            msg = AppendEntries(self.term, self.id, prev, self.log[prev].term,
-                                list(entries), advertised_commit)
+            msg = self._make_append(prev, list(entries), advertised_commit)
             start = self.loop.now
             size = 256 + sum(64 + (len(e.value) if isinstance(e.value, (bytes, str))
                                    else 8) for e in entries)
@@ -530,7 +731,20 @@ class Node:
                     self.net.call(self.id, peer, msg, size=size),
                     self.p.rpc_timeout)
             except TimeoutError_:
+                if self.p.replication_backoff:
+                    # capped exponential backoff + jitter instead of the
+                    # fixed rpc_timeout hot-loop against a slow/dead peer
+                    fails = self._backoff_fails.get(peer, 0) + 1
+                    self._backoff_fails[peer] = fails
+                    delay = min(self.p.backoff_max,
+                                self.p.backoff_base * (1 << (fails - 1)))
+                    delay *= 1.0 + self.prng.random()
+                    await self._backoff_park(peer, delay)
+                    if peer not in self.next_index:
+                        return    # pruned from the config while parked
                 continue
+            self._last_peer_ack[peer] = self.loop.now
+            self._backoff_fails.pop(peer, None)
             if not self.alive or self.state != "leader" or self._leader_epoch != epoch:
                 return
             if reply.term > self.term:

@@ -267,6 +267,9 @@ class RunResult:
     t_end: float = 0.0              # end of run incl. settle time
     loop_stats: dict = field(default_factory=dict)
     net_stats: dict = field(default_factory=dict)
+    #: cluster-aggregated protocol counters (terms, elections, evictions,
+    #: checksum drops) — the gray-failure matrix's metrics
+    raft_stats: dict = field(default_factory=dict)
 
     def summarize(self) -> dict:
         import statistics as st
@@ -320,12 +323,22 @@ def run_workload(raft: RaftParams, sim: SimParams,
     loop.run_until(t0 + sim.sim_duration + settle_time)
     history = workload.finalize()
 
+    ns = list(cluster.nodes.values())
     res = RunResult(history=history, t_start=t0, t_end=loop.now,
                     loop_stats=loop.stats(),
                     net_stats={"messages_sent": cluster.net.messages_sent,
                                "messages_delivered": cluster.net.messages_delivered,
                                "messages_dropped": cluster.net.messages_dropped,
-                               "bytes_sent": cluster.net.bytes_sent})
+                               "bytes_sent": cluster.net.bytes_sent},
+                    raft_stats={
+                        "max_term": max(n.term for n in ns),
+                        "elections_started": sum(n.elections_started for n in ns),
+                        "prevote_rounds": sum(n.prevote_rounds for n in ns),
+                        "leader_evictions": sum(n.leader_evictions for n in ns),
+                        "healthy_evictions": sum(n.healthy_evictions for n in ns),
+                        "quorum_step_downs": sum(n.quorum_step_downs for n in ns),
+                        "checksum_drops": sum(n.checksum_drops for n in ns),
+                    })
     for op in history:
         lat = op.end_ts - op.start_ts
         if op.op_type == "Read":

@@ -13,7 +13,14 @@ Three layers:
   duplication / reordering / loss, I/O slowdown, and the leader-chasing
   nemesis;
 * :mod:`repro.faults.scenarios` — the named scenario registry (safe vs
-  beyond-the-fault-model schedules) plus ``random_scenario`` for fuzzing.
+  beyond-the-fault-model schedules) plus the ``random_scenario`` /
+  ``random_membership_scenario`` / ``random_gray_scenario`` fuzzers.
+
+The catalogue spans three failure-model tiers: crash-stop (crashes,
+partitions, message chaos, honest clocks), gray (``SlowNode``
+degradation, ``FlappingLink`` duty-cycle flaps — nodes alive but
+unreliable), and corruption (``CorruptFault`` field-level AppendEntries
+mutation, detected-and-dropped when ``RaftParams.entry_checksums``).
 
 Everything runs on the simulated event loop: a (seed, scenario, policy)
 triple replays bit-identically. ``benchmarks/fault_matrix.py`` sweeps the
@@ -21,21 +28,22 @@ full policy × scenario × seed cube through ``check_linearizability``.
 """
 
 from .base import Fault, FaultContext, Scenario, Window
-from .library import (ClockSkew, CrashRestart, DiskLossRejoin, IoSlowdown,
-                      IsolateLeader, LeaderNemesis, MajorityMinority,
-                      MembershipChaos, MessageChaos, OneWayLink,
-                      PartialPartition)
-from .scenarios import (SCENARIOS, build_scenario,
+from .library import (ClockSkew, CorruptFault, CrashRestart, DiskLossRejoin,
+                      FlappingLink, IoSlowdown, IsolateLeader, LeaderNemesis,
+                      MajorityMinority, MembershipChaos, MessageChaos,
+                      OneWayLink, PartialPartition, SlowNode)
+from .scenarios import (SCENARIOS, build_scenario, random_gray_scenario,
                         random_membership_scenario, random_scenario,
                         safe_scenario_names, scenario,
                         unsafe_scenario_names)
 
 __all__ = [
     "Fault", "FaultContext", "Scenario", "Window",
-    "ClockSkew", "CrashRestart", "DiskLossRejoin", "IoSlowdown",
+    "ClockSkew", "CorruptFault", "CrashRestart", "DiskLossRejoin",
+    "FlappingLink", "IoSlowdown",
     "IsolateLeader", "LeaderNemesis", "MajorityMinority", "MembershipChaos",
-    "MessageChaos", "OneWayLink", "PartialPartition",
-    "SCENARIOS", "build_scenario", "random_membership_scenario",
-    "random_scenario",
+    "MessageChaos", "OneWayLink", "PartialPartition", "SlowNode",
+    "SCENARIOS", "build_scenario", "random_gray_scenario",
+    "random_membership_scenario", "random_scenario",
     "safe_scenario_names", "scenario", "unsafe_scenario_names",
 ]

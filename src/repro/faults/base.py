@@ -118,7 +118,9 @@ class Scenario:
     """A named, declarative fault schedule over one run."""
 
     def __init__(self, name: str, windows: list[Window],
-                 expect_safe: bool = True, description: str = "") -> None:
+                 expect_safe: bool = True, description: str = "",
+                 raft_overrides: Optional[dict] = None,
+                 meta: Optional[dict] = None) -> None:
         self.name = name
         self.windows = windows
         #: True = inside the fault model every *consistent* policy claims
@@ -127,6 +129,14 @@ class Scenario:
         #: findings, not failures.
         self.expect_safe = expect_safe
         self.description = description
+        #: RaftParams kwargs the scenario *requires* for its expect_safe
+        #: classification to hold (e.g. corruption scenarios need
+        #: ``entry_checksums=True``). Harnesses merge these on top of their
+        #: per-policy config; scenarios with no overrides leave historical
+        #: runs untouched.
+        self.raft_overrides = dict(raft_overrides or {})
+        #: free-form scenario annotations (e.g. flap duty cycle) for tests.
+        self.meta = dict(meta or {})
         self.ctx: Optional[FaultContext] = None
 
     def install(self, cluster: "Cluster") -> FaultContext:

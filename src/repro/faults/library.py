@@ -13,9 +13,12 @@ re-resolves on every firing, chasing each newly elected leader.
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Optional
 
 from ..core.network import MessageFault
+from ..core.prob import PRNG
+from ..core.raft import AppendEntries
 from .base import Fault, FaultContext
 
 
@@ -397,6 +400,177 @@ class MessageChaos(Fault):
     def stop(self, ctx: FaultContext) -> None:
         if self._handle is not None:
             ctx.net.remove_fault(self._handle)
+            self._handle = None
+
+
+class SlowNode(Fault):
+    """Gray failure: the scope's nodes are up but degraded — extra
+    per-message I/O service time plus inflated (and jittered) latency on
+    everything they send. Unlike a crash, the node keeps answering
+    *eventually*, so failure detectors stay quiet while its RPCs straggle
+    past ``rpc_timeout`` — the fixed-retry hot loop the adaptive backoff
+    flag exists to tame."""
+
+    def __init__(self, scope: str = "followers", extra_io: float = 500e-6,
+                 send_delay: float = 0.1, send_jitter: float = 0.05) -> None:
+        self.scope = scope
+        self.extra_io = extra_io
+        self.send_delay = send_delay
+        self.send_jitter = send_jitter
+        self.name = f"slow_node[{scope}]"
+        self._victims: list[int] = []
+        self._handles: list[int] = []
+
+    def start(self, ctx: FaultContext) -> None:
+        self._victims = ctx.pick(self.scope)
+        for nid in self._victims:
+            ctx.net.set_io_slowdown(nid, self.extra_io)
+            self._handles.append(ctx.net.add_fault(MessageFault(
+                extra_delay=self.send_delay, jitter=self.send_jitter,
+                src=nid)))
+
+    def stop(self, ctx: FaultContext) -> None:
+        for nid in self._victims:
+            ctx.net.set_io_slowdown(nid, 0.0)
+        for h in self._handles:
+            ctx.net.remove_fault(h)
+        self._victims = []
+        self._handles = []
+
+
+class FlappingLink(Fault):
+    """Gray failure: directed links flap on a deterministic duty cycle —
+    cut for ``down`` seconds, healed for ``up`` seconds, repeating while
+    the window is open. The default cuts every inbound link of the first
+    follower: the victim intermittently goes deaf, its election timer
+    fires, and (without PreVote) each flap bumps the term and evicts a
+    perfectly healthy leader. ``direction="out"`` flaps the victim's
+    outbound side instead; ``direction="pair"`` flaps the single directed
+    link victim -> leader.
+
+    ``flaps`` counts down-phase onsets; the property tests bound term
+    inflation per flap. Victim and links are resolved once, at window
+    start."""
+
+    def __init__(self, victim_scope: str = "followers",
+                 direction: str = "in",
+                 up: float = 0.25, down: float = 0.2) -> None:
+        assert direction in ("in", "out", "pair"), direction
+        self.victim_scope = victim_scope
+        self.direction = direction
+        self.up = up
+        self.down = down
+        self.name = f"flapping_link[{victim_scope},{direction}]"
+        self._active = False
+        self._links: list[tuple[int, int]] = []
+        self.victim: Optional[int] = None
+        self.flaps = 0
+
+    def start(self, ctx: FaultContext) -> None:
+        vid = ctx.pick(self.victim_scope)[0]
+        self.victim = vid
+        if self.direction == "in":
+            self._links = [(p, vid) for p in ctx.ids() if p != vid]
+        elif self.direction == "out":
+            self._links = [(vid, p) for p in ctx.ids() if p != vid]
+        else:
+            self._links = [(vid, ctx.leader_id())]
+        self._active = True
+        self.flaps = 0
+        self._go_down(ctx)
+
+    def _go_down(self, ctx: FaultContext) -> None:
+        if not self._active:
+            return
+        self.flaps += 1
+        ctx.note(f"flap down #{self.flaps} (victim {self.victim})")
+        for src, dst in self._links:
+            ctx.net.partition_oneway(src, dst)
+        ctx.loop.call_later(self.down, lambda: self._go_up(ctx))
+
+    def _go_up(self, ctx: FaultContext) -> None:
+        if not self._active:
+            return
+        ctx.note(f"flap up (victim {self.victim})")
+        for src, dst in self._links:
+            ctx.net.heal_oneway(src, dst)
+        ctx.loop.call_later(self.up, lambda: self._go_down(ctx))
+
+    def stop(self, ctx: FaultContext) -> None:
+        self._active = False
+        for src, dst in self._links:
+            ctx.net.heal_oneway(src, dst)
+
+
+class CorruptFault(Fault):
+    """Field-level corruption of in-flight AppendEntries: with
+    probability ``prob`` per delivered message, one field is mutated —
+    a data entry's value, ``prev_index``, ``prev_term``, or
+    ``leader_commit``. Mutated messages are fresh copies (the originals
+    are shared with the sender's log and must stay pristine); any stale
+    checksum/digest travels with the copy, so with
+    ``RaftParams.entry_checksums`` the receiver detects and drops it,
+    and without checksums the corruption is *applied* — the adversarial
+    positive control for the linearizability checker.
+
+    Draws come from a private PRNG seeded by ``seed``: zero draws from
+    any pre-existing stream, so scenarios without this fault replay
+    bit-identically."""
+
+    def __init__(self, prob: float = 0.05, seed: int = 0xBADC0DE,
+                 src: Optional[int] = None,
+                 dst: Optional[int] = None) -> None:
+        self.prob = prob
+        self.seed = seed
+        self.src = src
+        self.dst = dst
+        self.name = f"corrupt_append[p={prob}]"
+        self.prng = PRNG(seed)
+        self.corrupted = 0
+        self._handle: Optional[int] = None
+
+    def start(self, ctx: FaultContext) -> None:
+        self.prng = PRNG(self.seed)
+        self._handle = ctx.net.add_interceptor(
+            lambda s, d, m: self._intercept(ctx, s, d, m))
+
+    def _intercept(self, ctx: FaultContext, src: int, dst: int, msg):
+        if not isinstance(msg, AppendEntries):
+            return msg
+        if self.src is not None and src != self.src:
+            return msg
+        if self.dst is not None and dst != self.dst:
+            return msg
+        if self.prng.random() >= self.prob:
+            return msg
+        bad = replace(msg, entries=list(msg.entries))
+        # payload rot weighted up: header mutations (kinds 1-3) mostly
+        # bounce off Raft's log-matching check, payload rot is the silent
+        # kind real checksum machinery exists for
+        kind = self.prng.choice([0, 0, 0, 1, 2, 3])
+        data = [i for i, e in enumerate(bad.entries) if not e.is_control]
+        if kind == 0 and not data:
+            kind = 3                 # heartbeat: no payload to rot
+        if kind == 0:
+            # bit-rot a data entry's payload: same term/key, garbage value
+            # (control entries are excluded — a mangled CONFIG payload
+            # models a crash, not silent corruption)
+            i = self.prng.choice(data)
+            e = bad.entries[i]
+            bad.entries[i] = replace(e, value=f"CORRUPT:{e.value}")
+        elif kind == 1:
+            bad.prev_index += self.prng.choice([-2, -1, 1, 2])
+        elif kind == 2:
+            bad.prev_term += self.prng.choice([1, 2])
+        else:
+            bad.leader_commit += self.prng.choice([-1, 1, 2])
+        self.corrupted += 1
+        ctx.note(f"corrupted append {src}->{dst} (kind {kind})")
+        return bad
+
+    def stop(self, ctx: FaultContext) -> None:
+        if self._handle is not None:
+            ctx.net.remove_interceptor(self._handle)
             self._handle = None
 
 

@@ -25,27 +25,33 @@ import random
 from typing import Callable, Optional
 
 from .base import Scenario, Window
-from .library import (ClockSkew, CrashRestart, DiskLossRejoin, IoSlowdown,
-                      IsolateLeader, LeaderNemesis, MajorityMinority,
-                      MembershipChaos, MessageChaos, OneWayLink,
-                      PartialPartition)
+from .library import (ClockSkew, CorruptFault, CrashRestart, DiskLossRejoin,
+                      FlappingLink, IoSlowdown, IsolateLeader, LeaderNemesis,
+                      MajorityMinority, MembershipChaos, MessageChaos,
+                      OneWayLink, PartialPartition, SlowNode)
 
 #: name -> scenario factory; call ``build_scenario(name)`` for a run-ready
 #: instance. Iteration order is the canonical matrix order.
 SCENARIOS: dict[str, Callable[[], Scenario]] = {}
 
 
-def scenario(name: str, expect_safe: bool = True, description: str = ""):
-    """Register a window-list factory as a named scenario."""
+def scenario(name: str, expect_safe: bool = True, description: str = "",
+             raft_overrides: Optional[dict] = None,
+             meta: Optional[dict] = None):
+    """Register a window-list factory as a named scenario.
+    ``raft_overrides`` are RaftParams kwargs the scenario needs for its
+    ``expect_safe`` classification (e.g. checksums for corruption)."""
 
     def deco(factory: Callable[[], list[Window]]):
         def build() -> Scenario:
             return Scenario(name, factory(), expect_safe=expect_safe,
-                            description=description)
+                            description=description,
+                            raft_overrides=raft_overrides, meta=meta)
 
         build.scenario_name = name
         build.expect_safe = expect_safe
         build.description = description
+        build.raft_overrides = dict(raft_overrides or {})
         SCENARIOS[name] = build
         return build
 
@@ -165,6 +171,96 @@ def _combo_chaos() -> list[Window]:
         Window(MessageChaos(extra_delay=0.01, jitter=0.01, label="delay"),
                at=0.25, until=0.9),
         Window(MessageChaos(dup_prob=0.2, label="dup"), at=0.4, until=1.0),
+        Window(CrashRestart("leader", downtime=0.3), at=0.5),
+    ]
+
+
+# --------------------------------------------------- gray-failure tier
+@scenario("slow_follower",
+          description="one follower gray-degrades: +500µs I/O service plus "
+                      "~100ms straggle on everything it sends — alive to "
+                      "failure detectors, useless to the quorum")
+def _slow_follower() -> list[Window]:
+    return [Window(SlowNode("minority", extra_io=500e-6, send_delay=0.1,
+                            send_jitter=0.05), at=0.2, until=0.9)]
+
+
+@scenario("slow_leader",
+          description="the leader itself straggles: heartbeats and "
+                      "replication limp out ~60ms late — the CheckQuorum "
+                      "borderline case")
+def _slow_leader() -> list[Window]:
+    return [Window(SlowNode("leader", extra_io=300e-6, send_delay=0.06,
+                            send_jitter=0.03), at=0.3, until=0.8)]
+
+
+@scenario("flapping_node",
+          description="first follower's inbound links flap on a 450ms-down/"
+                      "250ms-up duty cycle (down > election timeout): it "
+                      "repeatedly goes deaf, times out, and — without "
+                      "PreVote — its term-bumping candidacies evict a "
+                      "healthy leader every flap",
+          meta={"flap_down": 0.45, "flap_up": 0.25})
+def _flapping_node() -> list[Window]:
+    return [Window(FlappingLink("followers", direction="in",
+                                up=0.25, down=0.45), at=0.2, until=1.2)]
+
+
+@scenario("flapping_outbound",
+          description="first follower's outbound links flap: its votes and "
+                      "acks vanish intermittently while it still hears the "
+                      "leader (no election pressure, replication staggers)",
+          meta={"flap_down": 0.15, "flap_up": 0.2})
+def _flapping_outbound() -> list[Window]:
+    return [Window(FlappingLink("followers", direction="out",
+                                up=0.2, down=0.15), at=0.2, until=1.0)]
+
+
+@scenario("gray_combo",
+          description="slow follower + flapping deaf follower + global "
+                      "delay spike: the full gray-failure gauntlet")
+def _gray_combo() -> list[Window]:
+    return [
+        Window(SlowNode("minority", extra_io=300e-6, send_delay=0.08,
+                        send_jitter=0.04), at=0.15, until=0.9),
+        Window(FlappingLink("followers", direction="in",
+                            up=0.25, down=0.45), at=0.3, until=1.2),
+        Window(MessageChaos(extra_delay=0.01, jitter=0.01, label="delay"),
+               at=0.4, until=0.8),
+    ]
+
+
+# --------------------------------------------------- corruption tier
+@scenario("corrupt_entries_checked",
+          description="8% of AppendEntries mutated in flight (payloads, "
+                      "prev_index/term, commit_index); end-to-end checksums "
+                      "detect and drop every corrupted message",
+          raft_overrides={"entry_checksums": True})
+def _corrupt_entries_checked() -> list[Window]:
+    return [Window(CorruptFault(prob=0.08, seed=0xBADC0DE), at=0.2,
+                   until=0.9)]
+
+
+@scenario("corrupt_storm_checked",
+          description="25% corruption rate plus a leader crash mid-storm; "
+                      "checksums must still hold the line",
+          raft_overrides={"entry_checksums": True})
+def _corrupt_storm_checked() -> list[Window]:
+    return [
+        Window(CorruptFault(prob=0.25, seed=0xC0FFEE), at=0.15, until=1.0),
+        Window(CrashRestart("leader", downtime=0.3), at=0.5),
+    ]
+
+
+@scenario("corrupt_entries_unchecked", expect_safe=False,
+          description="the corrupt_storm schedule with checksums OFF: "
+                      "corrupted entries replicate, a follower with a "
+                      "poisoned log takes over after the crash, and the "
+                      "divergence becomes client-visible — violations here "
+                      "are the checker's positive control")
+def _corrupt_entries_unchecked() -> list[Window]:
+    return [
+        Window(CorruptFault(prob=0.25, seed=0xC0FFEE), at=0.15, until=1.0),
         Window(CrashRestart("leader", downtime=0.3), at=0.5),
     ]
 
@@ -311,3 +407,42 @@ def random_membership_scenario(seed: int, duration: float = 1.2) -> Scenario:
         windows.append(Window(fault, at=at, until=until))
     return Scenario(f"random_membership_{seed}", windows, expect_safe=True,
                     description=f"random membership churn (seed {seed})")
+
+
+def random_gray_scenario(seed: int, duration: float = 1.2) -> Scenario:
+    """Random gray-failure schedule: exactly one :class:`FlappingLink`
+    (random duty cycle and direction) overlapped with 0-2 degradations
+    (slow node, delay chaos, I/O slowdown) — deterministic in ``seed``.
+    Crash- and partition-free, so voting-quorum connectivity persists
+    throughout: the schedule space over which the PreVote/CheckQuorum
+    term-inflation and single-lease-holder properties are asserted.
+
+    Separate draw path (note the salt): adding this generator leaves
+    ``random_scenario`` / ``random_membership_scenario`` sequences for
+    every existing seed untouched."""
+    rng = random.Random(seed ^ 0x6EA7)
+    # down phases straddle the matrix election timeout (0.3-0.4s): some
+    # flaps starve the victim long enough to campaign, some don't
+    down = rng.uniform(0.25, 0.55)
+    up = rng.uniform(0.15, 0.35)
+    flap = FlappingLink("followers",
+                        direction=rng.choice(["in", "out", "pair"]),
+                        up=up, down=down)
+    windows = [Window(flap, at=rng.uniform(0.1, 0.3),
+                      until=duration - 0.1)]
+    pool = [
+        lambda r: SlowNode("minority", extra_io=r.uniform(100e-6, 500e-6),
+                           send_delay=r.uniform(0.02, 0.1),
+                           send_jitter=r.uniform(0.0, 0.05)),
+        lambda r: MessageChaos(extra_delay=r.uniform(0.0, 0.015),
+                               jitter=r.uniform(0.0, 0.01), label="gray"),
+        lambda r: IoSlowdown(r.uniform(50e-6, 300e-6), scope="all"),
+    ]
+    for _ in range(rng.randint(0, 2)):
+        fault = rng.choice(pool)(rng)
+        at = rng.uniform(0.15, 0.5 * duration)
+        until = min(duration - 0.05, at + rng.uniform(0.2, 0.6 * duration))
+        windows.append(Window(fault, at=at, until=until))
+    return Scenario(f"random_gray_{seed}", windows, expect_safe=True,
+                    description=f"random gray-failure schedule (seed {seed})",
+                    meta={"flap_down": down, "flap_up": up})

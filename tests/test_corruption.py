@@ -1,0 +1,118 @@
+"""Corruption tier: end-to-end checksums on AppendEntries.
+
+The adversarial positive control for the whole detection stack: the same
+corrupting storm schedule must (a) produce client-visible
+linearizability violations when checksums are OFF — proving the fault
+has real teeth and the checker catches it — and (b) produce zero
+violations when checksums are ON, with the drop counter showing the
+corrupted messages were actually intercepted, not just absent."""
+
+import pytest
+from dataclasses import replace
+
+from repro.core import (LinearizabilityError, RaftParams, ReadMode,
+                        SimParams, build_cluster, check_linearizability,
+                        run_workload)
+from repro.core.raft import (AppendEntries, LogEntry, append_digest,
+                             entry_checksum)
+from repro.faults import build_scenario
+
+# Small keyspace + write-heavy mix so reads revisit corrupted keys: with
+# the default sparse keyspace a poisoned entry is rarely re-read and the
+# divergence stays silent.
+SIM = dict(n_keys=25, write_fraction=0.5, sim_duration=1.5,
+           interarrival=3e-3)
+
+
+def storm_run(seed: int, *, checksums: bool):
+    sc = build_scenario("corrupt_entries_unchecked")  # storm, no overrides
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=0.3,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6, rpc_timeout=0.15,
+                      entry_checksums=checksums)
+    sim = SimParams(seed=seed, **SIM)
+    return run_workload(raft, sim, fault_script=sc.install, check=False,
+                        settle_time=1.5)
+
+
+# ------------------------------------------------------------- unit level
+def _leader_follower():
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=0.5,
+                      lease_duration=2.0, entry_checksums=True)
+    c = build_cluster(raft, SimParams(seed=3))
+    ldr = c.wait_for_leader()
+    f = next(n for n in c.nodes.values() if n is not ldr)
+    return c, ldr, f
+
+
+def test_checksums_stamped_and_verified_round_trip():
+    c, ldr, f = _leader_follower()
+    e = LogEntry(ldr.term, "k", 1, ldr.log[ldr.last_log_index].interval)
+    e.checksum = entry_checksum(e.term, e.key, e.value)
+    msg = ldr._make_append(ldr.last_log_index, [e], ldr.commit_index)
+    assert msg.checksum == append_digest(msg)
+    reply = f._handle_append(ldr.id, msg)
+    assert reply is not None and reply.success
+    assert f.checksum_drops == 0
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda m: replace(m, entries=[replace(m.entries[0], value=999)]),
+    lambda m: replace(m, prev_index=m.prev_index - 1),
+    lambda m: replace(m, prev_term=m.prev_term + 1),
+    lambda m: replace(m, leader_commit=m.leader_commit + 2),
+], ids=["payload", "prev_index", "prev_term", "commit_index"])
+def test_handle_append_drops_mutated_message(mutate):
+    """Any single-field in-flight mutation breaks the digest: the
+    follower drops the message before touching ANY state — no reply, no
+    term bump, no log change."""
+    c, ldr, f = _leader_follower()
+    e = LogEntry(ldr.term, "k", 1, ldr.log[ldr.last_log_index].interval)
+    e.checksum = entry_checksum(e.term, e.key, e.value)
+    msg = ldr._make_append(ldr.last_log_index, [e], ldr.commit_index)
+    log_before, term_before = list(f.log), f.term
+    reply = f._handle_append(ldr.id, mutate(msg))
+    assert reply is None
+    assert f.checksum_drops == 1
+    assert f.log == log_before and f.term == term_before
+
+
+def test_missing_checksum_rejected_when_required():
+    """A message with no digest at all (e.g. from a sender that skipped
+    ``_make_append``) is dropped, not trusted."""
+    c, ldr, f = _leader_follower()
+    bare = AppendEntries(ldr.term, ldr.id, ldr.last_log_index,
+                         ldr.log[ldr.last_log_index].term, [],
+                         ldr.commit_index)
+    assert bare.checksum is None
+    assert f._handle_append(ldr.id, bare) is None
+    assert f.checksum_drops == 1
+
+
+# -------------------------------------------------- end-to-end control
+STORM_SEEDS = range(6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", STORM_SEEDS)
+def test_unchecked_corruption_is_client_visible(seed):
+    """Positive control: with checksums OFF the corrupt storm poisons a
+    follower's log, the mid-storm leader crash promotes it, and the
+    divergence surfaces as a linearizability violation. If this ever
+    stops failing-by-design, the corruption fault (or the checker) has
+    lost its teeth."""
+    res = storm_run(seed, checksums=False)
+    with pytest.raises(LinearizabilityError):
+        check_linearizability(res.history)
+    assert res.raft_stats["checksum_drops"] == 0   # nothing was detected
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", STORM_SEEDS)
+def test_checked_corruption_stays_linearizable(seed):
+    """Same storm, same seeds, checksums ON: every corrupted message is
+    detected-and-dropped and the history stays linearizable."""
+    res = storm_run(seed, checksums=True)
+    assert check_linearizability(res.history) > 0
+    assert res.raft_stats["checksum_drops"] > 0    # drops actually fired
+    assert res.reads_ok + res.writes_ok > 0        # still available

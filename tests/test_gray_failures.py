@@ -1,0 +1,199 @@
+"""Gray-failure resilience: PreVote, CheckQuorum, adaptive replication
+backoff — unit behavior plus the property tests over random gray
+schedules (term inflation bounded per flap window; a lease is never held
+by two nodes at once)."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fixed-example fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (RaftParams, ReadMode, SimParams, build_cluster,
+                        check_linearizability, run_workload)
+from repro.faults import FlappingLink, random_gray_scenario
+
+ET = 0.3
+
+
+def make(**kw):
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=ET,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6, rpc_timeout=0.15, **kw)
+    c = build_cluster(raft, SimParams(seed=5))
+    return c, c.wait_for_leader()
+
+
+def settle(c, dt):
+    c.loop.run_until(c.loop.now + dt)
+
+
+def deafen(c, victim):
+    """Cut every inbound link of ``victim`` (it can still send)."""
+    for other in c.nodes.values():
+        if other is not victim:
+            c.net.partition_oneway(other.id, victim.id)
+
+
+# ------------------------------------------------------------------ PreVote
+def test_deaf_follower_storms_terms_without_prevote():
+    """Baseline disruption: a follower that hears nothing but can still
+    send campaigns with real term bumps, evicting the healthy leader on
+    every election timeout."""
+    c, ldr = make()
+    t0 = ldr.term
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    deafen(c, victim)
+    settle(c, 4 * ET)
+    assert victim.term > t0                   # terms inflated
+    assert ldr.leader_evictions >= 1          # healthy leader deposed
+    assert ldr.healthy_evictions >= 1
+
+
+def test_prevote_blocks_deaf_follower_disruption():
+    """With PreVote the victim's trial ballots go unanswered (replies are
+    cut inbound), so it never bumps its term and the healthy leader is
+    never evicted."""
+    c, ldr = make(prevote=True)
+    t0 = ldr.term
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    deafen(c, victim)
+    settle(c, 6 * ET)
+    assert victim.term == t0                  # no term inflation
+    assert victim.prevote_rounds >= 1         # it did try
+    assert ldr.is_leader() and ldr.leader_evictions == 0
+
+
+def test_prevote_still_elects_after_real_leader_death():
+    """PreVote must not block legitimate elections: followers grant the
+    trial ballot once the leader is silent past an election timeout."""
+    c, ldr = make(prevote=True)
+    ldr.crash()
+    settle(c, 8 * ET)
+    new = [n for n in c.nodes.values() if n.is_leader()]
+    assert len(new) == 1 and new[0] is not ldr
+
+
+def test_prevote_denied_while_leader_is_live():
+    """Leader stickiness: a node that heard the leader within an election
+    timeout refuses the trial ballot even for an up-to-date log."""
+    from repro.core.raft import PreVoteRequest
+    c, ldr = make(prevote=True)
+    f = next(n for n in c.nodes.values() if n is not ldr)
+    settle(c, 0.1)                            # fresh heartbeat received
+    reply = f._handle_prevote(99, PreVoteRequest(
+        f.term + 1, 99, f.last_log_index, f.log[f.last_log_index].term))
+    assert not reply.granted
+    assert f.term == ldr.term                 # trial ballot bumped nothing
+
+
+# -------------------------------------------------------------- CheckQuorum
+def test_check_quorum_steps_down_partitioned_leader():
+    """A leader that stops hearing acks relinquishes leadership (and its
+    lease) within ~an election timeout instead of serving a doomed lease
+    window."""
+    c, ldr = make(check_quorum=True)
+    deafen(c, ldr)                            # leader sends, hears nothing
+    settle(c, 4 * ET)
+    assert not ldr.is_leader()
+    assert ldr.quorum_step_downs >= 1
+    # voluntary step-down with no quorum is not a *healthy* eviction
+    assert ldr.healthy_evictions == 0
+
+
+def test_leader_without_check_quorum_keeps_serving():
+    """Contrast: with the flag off the deaf leader stays 'leader' in its
+    own eyes for the full run (nothing forces it out — its own term never
+    moves and it hears no higher term)."""
+    c, ldr = make()
+    deafen(c, ldr)
+    settle(c, 4 * ET)
+    assert ldr.state == "leader"
+    assert ldr.quorum_step_downs == 0
+
+
+# ----------------------------------------------------------------- backoff
+def test_backoff_reduces_retry_traffic_to_dead_peer():
+    """Capped exponential backoff sends measurably fewer RPCs at a dead
+    peer than the fixed rpc_timeout hot loop, without giving up on it."""
+    sent = {}
+    for flag in (False, True):
+        c, ldr = make(replication_backoff=flag)
+        victim = next(n for n in c.nodes.values() if n is not ldr)
+        before = c.net.messages_sent
+        victim.crash()
+        settle(c, 3.0)
+        sent[flag] = c.net.messages_sent - before
+        if flag:
+            assert ldr._backoff_fails.get(victim.id, 0) >= 3
+    assert sent[True] < sent[False]
+
+
+def test_backoff_state_clears_on_peer_recovery():
+    c, ldr = make(replication_backoff=True)
+    victim = next(n for n in c.nodes.values() if n is not ldr)
+    victim.crash()
+    settle(c, 1.5)
+    assert ldr._backoff_fails.get(victim.id, 0) >= 1
+    victim.restart()
+    settle(c, 2.0)
+    assert victim.id not in ldr._backoff_fails   # first ack reset it
+    assert victim.data == ldr.data               # and it caught up
+
+
+# ------------------------------------------------- gray schedule properties
+def _gray_run(seed: int):
+    """One random gray schedule under the full resilience tier, with an
+    omniscient lease-overlap sampler riding on the loop."""
+    sc = random_gray_scenario(seed)
+    raft = RaftParams(read_mode=ReadMode.LEASEGUARD, election_timeout=ET,
+                      election_jitter=0.1, heartbeat_interval=0.03,
+                      lease_duration=0.6, rpc_timeout=0.15,
+                      prevote=True, check_quorum=True,
+                      replication_backoff=True)
+    sim = SimParams(seed=seed % 97, sim_duration=1.2, interarrival=3e-3)
+    overlaps = []
+
+    def script(cluster):
+        sc.install(cluster)
+
+        def sample():
+            holders = [n.id for n in cluster.nodes.values()
+                       if n.alive and n.policy.holds_lease()]
+            if len(holders) > 1:
+                overlaps.append((cluster.loop.now, holders))
+            cluster.loop.call_later(0.01, sample)
+
+        cluster.loop.call_later(0.01, sample)
+
+    res = run_workload(raft, sim, fault_script=script, check=False,
+                       settle_time=1.5)
+    flaps = sum(w.fault.flaps for w in sc.windows
+                if isinstance(w.fault, FlappingLink))
+    return res, flaps, overlaps
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_random_gray_schedule_bounds_term_inflation(seed):
+    """Over any random gray schedule (flapping + slow nodes + delay; a
+    voting quorum stays connected throughout), PreVote + CheckQuorum hold
+    term inflation to at most one term per flap window."""
+    res, flaps, _ = _gray_run(seed)
+    inflation = res.raft_stats["max_term"] - 1
+    assert inflation <= max(1, flaps), \
+        f"term inflation {inflation} > flap windows {flaps} (seed {seed})"
+    assert res.raft_stats["healthy_evictions"] <= flaps
+    assert check_linearizability(res.history) >= 0
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_random_gray_schedule_never_double_leases(seed):
+    """Across any gray schedule, two nodes never hold a serving lease at
+    the same instant (sampled omnisciently every 10 ms of simulated
+    time)."""
+    _, _, overlaps = _gray_run(seed + 424242)
+    assert not overlaps, f"concurrent lease holders: {overlaps[:3]}"

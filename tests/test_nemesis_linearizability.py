@@ -22,12 +22,15 @@ CONSISTENT_MODES = [m for m in REGISTRY if m is not ReadMode.INCONSISTENT]
 
 def nemesis_run(mode, scenario_name, seed, *, follower_frac=0.0,
                 sim_duration=1.2, scenario=None):
+    sc = scenario if scenario is not None else build_scenario(scenario_name)
+    # scenarios may require RaftParams flags for their expect_safe
+    # classification (corruption tier needs entry_checksums)
     raft = RaftParams(read_mode=mode, election_timeout=0.3,
                       election_jitter=0.1, heartbeat_interval=0.03,
-                      lease_duration=0.6, rpc_timeout=0.15)
+                      lease_duration=0.6, rpc_timeout=0.15,
+                      **sc.raft_overrides)
     sim = SimParams(seed=seed, sim_duration=sim_duration, interarrival=3e-3,
                     follower_read_fraction=follower_frac)
-    sc = scenario if scenario is not None else build_scenario(scenario_name)
     return run_workload(raft, sim, fault_script=sc.install, check=False,
                         settle_time=1.5)
 

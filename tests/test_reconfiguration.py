@@ -115,17 +115,40 @@ def test_truncated_config_reverts_to_seed_membership():
     assert f.majority() == 2
 
 
-def test_removed_peer_replication_state_pruned():
+@pytest.mark.parametrize("backoff", [False, True],
+                         ids=["plain", "replication_backoff"])
+def test_removed_peer_replication_state_pruned(backoff):
     """Regression: removing a member must prune the leader's next/match
     bookkeeping, or stale match_index entries linger across
-    reconfigurations (and their heartbeat loops leak)."""
-    c, raft = make(n_nodes=5)
+    reconfigurations (and their heartbeat loops leak). With adaptive
+    backoff on, a retry timer parked for the removed peer must be
+    cancelled and reaped too — not left to fire into ``next_index`` for
+    a ghost peer."""
+    c, raft = make(n_nodes=5, replication_backoff=backoff,
+                   backoff_base=0.05, backoff_max=0.4)
     ldr = c.wait_for_leader()
     victim = next(n for n in c.nodes.values() if n is not ldr)
     assert victim.id in ldr.next_index and victim.id in ldr.match_index
+    if backoff:
+        # a dead peer drives the retry loop into parked exponential
+        # backoff; step until the leader is mid-park for the victim
+        victim.crash()
+        deadline = c.loop.now + 5.0
+        while victim.id not in ldr._backoff_sleep and c.loop.now < deadline:
+            c.loop._step()
+        assert victim.id in ldr._backoff_sleep
+        assert ldr._backoff_fails.get(victim.id, 0) >= 1
     assert run(c, ldr.change_membership(set(ldr.config) - {victim.id})).ok
     assert victim.id not in ldr.next_index
     assert victim.id not in ldr.match_index
+    # the parked timer was woken and reaped synchronously with the prune,
+    # and the woken retry task must not re-park for the ghost peer
+    assert victim.id not in ldr._backoff_fails
+    assert victim.id not in ldr._backoff_sleep
+    if victim.alive:
+        victim.crash()   # decommission: a removed zombie would campaign
+    settle(c, 1.0)
+    assert victim.id not in ldr._backoff_sleep
     # bookkeeping tracks exactly the replication set after further churn
     new = c.spawn_node(5, raft, learner=True)
     assert run(c, ldr.change_membership(

@@ -1,0 +1,308 @@
+"""Policy × fleet-scenario × seed matrix over the training-fleet
+simulator, plus the fleet-size scale sweep.
+
+For every registered consistency policy and every named fleet scenario
+(data-plane chaos, control-plane chaos, and combined schedules) this
+runs ``repro.fleet.run_fleet`` over many seeds, audits checkpoint
+lineage omnisciently, and writes ``BENCH_fleet_matrix.json`` at the
+repo root. Reduced slices (``--smoke``, ``--policies``, ``--scenarios``,
+fewer seeds) write ``BENCH_fleet_matrix_smoke.json`` instead.
+
+The contract the matrix enforces (and CI smoke-checks):
+
+* every **consistent** policy × every fleet scenario × every seed has
+  ZERO lineage violations (no forks, durable restores, staleness bound);
+* the **inconsistent** baseline is flagged under partition scenarios —
+  the positive control proving the lineage checker bites;
+* per-policy coordinator message load per worker-step shows
+  leaseguard ≪ quorum — the paper's claim that zero-roundtrip reads
+  make the fleet-wide checkpoint-poll loop free, measured at fleet
+  scale by the ``--scale`` sweep (fleet sizes × {leaseguard, quorum}).
+
+Usage:
+    python benchmarks/fleet_matrix.py [--seeds N] [--smoke]
+        [--scenarios a,b] [--policies x,y] [--jobs N] [--no-scale]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.consistency import benchmark_configs, split_bench_config  # noqa: E402
+from repro.core import RaftParams, SimParams  # noqa: E402
+from repro.fleet import (FleetParams, build_fleet_scenario,  # noqa: E402
+                         fleet_scenario_names, run_fleet)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_fleet_matrix.json"
+SMOKE_OUT_PATH = REPO_ROOT / "BENCH_fleet_matrix_smoke.json"
+
+NON_LINEARIZABLE = {"inconsistent"}
+
+#: scenarios under which the inconsistent baseline is expected to restore
+#: from stale manifests (the positive control): anything that partitions
+#: or kills the Raft leader while workers restore.
+PARTITION_SCENARIOS = {"partition_churn", "leader_crash_mid_commit",
+                       "leader_nemesis_fleet", "chief_and_leader_die"}
+
+DEFAULT_SEEDS = 8
+#: fleet sizes for the quorum-poll-bottleneck scale sweep
+SCALE_WORKERS = [4, 16, 48]
+SCALE_POLICIES = ["leaseguard", "quorum"]
+SCALE_SEEDS = 2
+SCALE_DURATION = 2.0
+#: leaseguard must carry at most this fraction of quorum's per-step load
+LOAD_RATIO_MAX = 0.5
+
+
+def policy_configs() -> dict[str, dict]:
+    return benchmark_configs(variants=False)
+
+
+def _raft(policy: str, overrides: dict) -> RaftParams:
+    flags, _sim_flags = split_bench_config(policy_configs()[policy])
+    return RaftParams(election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6,
+                      rpc_timeout=0.15, **{**flags, **overrides})
+
+
+def _fleet_params(policy: str, **kw) -> FleetParams:
+    # clients of the no-consistency baseline read whatever replica is
+    # cheapest — same modelling trick as the workload matrix's
+    # follower_read_fraction
+    if policy in NON_LINEARIZABLE:
+        kw.setdefault("read_any_fraction", 0.3)
+    return FleetParams(**kw)
+
+
+def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
+    """One deterministic fleet run; returns a JSON-ready row."""
+    sc = build_fleet_scenario(scenario_name)
+    res = run_fleet(_raft(policy, sc.raft_overrides), SimParams(seed=seed),
+                    _fleet_params(policy), sc)
+    row = {"policy": policy, "scenario": scenario_name, "seed": seed}
+    row.update(res.summarize())
+    # full violation detail only when something fired (rows stay compact)
+    if res.violations:
+        row["violation_detail"] = res.violations[:10]
+    return row
+
+
+def run_scale_cell(policy: str, n_workers: int, seed: int) -> dict:
+    res = run_fleet(_raft(policy, {}), SimParams(seed=seed),
+                    _fleet_params(policy, n_workers=n_workers,
+                                  duration=SCALE_DURATION),
+                    build_fleet_scenario("calm"))
+    return {"policy": policy, "n_workers": n_workers, "seed": seed,
+            "total_steps": res.total_steps, "messages": res.messages,
+            "messages_per_step": round(res.messages_per_step, 3),
+            "violations": len(res.violations)}
+
+
+def _cell_args(policies, scenarios, seeds):
+    return [(p, s, seed) for p in policies for s in scenarios
+            for seed in seeds]
+
+
+def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
+               jobs: int = 1, progress: bool = True) -> list[dict]:
+    """Run the cube; byte-identical output for any ``jobs`` (round-robin
+    shard + ordered merge, same scheme as the fault matrix)."""
+    cells = _cell_args(policies, scenarios, seeds)
+    if jobs > 1:
+        from concurrent.futures import ProcessPoolExecutor
+        shards = [cells[k::jobs] for k in range(jobs)]
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            shard_rows = list(ex.map(_run_shard, shards))
+        iters = [iter(sr) for sr in shard_rows]
+        rows = [next(iters[i % jobs]) for i in range(len(cells))]
+    else:
+        rows = []
+        for i, cell in enumerate(cells):
+            rows.append(run_cell(*cell))
+            if progress and (i + 1) % 50 == 0:
+                print(f"# {i + 1}/{len(cells)} cells", file=sys.stderr)
+    rows.sort(key=lambda r: (r["policy"], r["scenario"], r["seed"]))
+    return rows
+
+
+def _run_shard(cells) -> list[dict]:
+    return [run_cell(*cell) for cell in cells]
+
+
+def summarize(rows: list[dict]) -> list[dict]:
+    """Per (policy, scenario): lineage verdicts + the headline metrics."""
+    agg: dict[tuple[str, str], dict] = {}
+    for r in rows:
+        a = agg.setdefault((r["policy"], r["scenario"]), {
+            "policy": r["policy"], "scenario": r["scenario"], "seeds": 0,
+            "violation_cells": 0, "violations": 0, "total_steps": 0,
+            "stale_polls": 0, "chief_deaths": 0,
+            "_mps": [], "_steps_lost": [], "_recov": []})
+        a["seeds"] += 1
+        a["violation_cells"] += 1 if r["violations"] else 0
+        a["violations"] += r["violations"]
+        a["total_steps"] += r["total_steps"]
+        a["stale_polls"] += r["stale_polls"]
+        a["chief_deaths"] += r["chief_deaths"]
+        a["_mps"].append(r["messages_per_step"])
+        a["_steps_lost"].extend(r["steps_lost"])
+        a["_recov"].extend([t for t in r["chief_recovery"] if t is not None]
+                           + r["leader_recovery"])
+    out = []
+    for key in sorted(agg):
+        a = agg[key]
+        a["messages_per_step"] = round(statistics.fmean(a.pop("_mps")), 3)
+        lost = a.pop("_steps_lost")
+        a["mean_steps_lost"] = round(statistics.fmean(lost), 2) if lost else 0
+        recov = a.pop("_recov")
+        a["mean_recovery"] = round(statistics.fmean(recov), 3) if recov else None
+        out.append(a)
+    return out
+
+
+class FleetMatrixError(AssertionError):
+    """The matrix contract failed: a consistent policy broke checkpoint
+    lineage, the positive control came up empty, or leaseguard's message
+    load is not ≪ quorum's."""
+
+
+def run(quick: bool = False) -> list[dict]:
+    """benchmarks.run entry point: full matrix, or the CI smoke slice."""
+    return main(["--smoke"] if quick else [])
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=DEFAULT_SEEDS,
+                    help=f"seeds per cell (default {DEFAULT_SEEDS})")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated fleet scenario names (default: all)")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy names (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI slice: 3 policies x 3 scenarios x 3 seeds")
+    ap.add_argument("--no-scale", action="store_true",
+                    help="skip the fleet-size scale sweep")
+    ap.add_argument("--jobs", type=int,
+                    default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: BENCH_fleet_matrix.json; "
+                         "reduced slices go to BENCH_fleet_matrix_smoke.json)")
+    args = ap.parse_args(argv)
+
+    policies = list(policy_configs())
+    scenarios = fleet_scenario_names()
+    seeds = list(range(args.seeds))
+    if args.smoke:
+        policies = ["leaseguard", "quorum", "inconsistent"]
+        scenarios = ["calm", "chief_kill", "partition_churn"]
+        seeds = list(range(3))
+    if args.scenarios:
+        scenarios = args.scenarios.split(",")
+    if args.policies:
+        policies = args.policies.split(",")
+    full_cube = (not args.smoke and not args.scenarios and not args.policies
+                 and args.seeds >= DEFAULT_SEEDS)
+    out_path = args.out or str(OUT_PATH if full_cube else SMOKE_OUT_PATH)
+
+    n = len(policies) * len(scenarios) * len(seeds)
+    print(f"# fleet matrix: {len(policies)} policies x {len(scenarios)} "
+          f"scenarios x {len(seeds)} seeds = {n} cells (jobs={args.jobs})",
+          file=sys.stderr)
+    rows = run_matrix(policies, scenarios, seeds, jobs=args.jobs)
+    summary = summarize(rows)
+
+    scale_rows: list[dict] = []
+    if not args.no_scale:
+        workers = SCALE_WORKERS[:2] if args.smoke else SCALE_WORKERS
+        n_seeds = 1 if args.smoke else SCALE_SEEDS
+        for p in SCALE_POLICIES:
+            for nw in workers:
+                for seed in range(n_seeds):
+                    scale_rows.append(run_scale_cell(p, nw, seed))
+        print(f"# scale sweep: {len(scale_rows)} cells", file=sys.stderr)
+
+    consistent = [p for p in policies if p not in NON_LINEARIZABLE]
+    bad = [r for r in rows if r["violations"] and r["policy"] in consistent]
+    control = [r for r in rows
+               if r["violations"] and r["policy"] in NON_LINEARIZABLE]
+    # the control has teeth only when the baseline actually ran against
+    # partition-class scenarios over enough seeds to make staleness likely
+    control_expected = (set(policies) & NON_LINEARIZABLE
+                        and set(scenarios) & PARTITION_SCENARIOS
+                        and len(seeds) >= 5)
+
+    # the paper's headline: per-step message load, leaseguard vs quorum
+    load = {}
+    for p in set(SCALE_POLICIES) & set(policies):
+        mps = [r["messages_per_step"] for r in rows
+               if r["policy"] == p and r["scenario"] == "calm"]
+        if mps:
+            load[p] = round(statistics.fmean(mps), 3)
+
+    artifact = {
+        "policies": policies,
+        "scenarios": scenarios,
+        "seeds": seeds,
+        "consistent_policies": consistent,
+        "consistent_violations": len(bad),
+        "inconsistent_violations": len(control),
+        "calm_messages_per_step": load,
+        "summary": summary,
+        "scale": scale_rows,
+        "cells": rows,
+    }
+    Path(out_path).write_text(json.dumps(artifact, indent=2, sort_keys=True)
+                              + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+    for s in summary:
+        print(f"{s['policy']:14s} {s['scenario']:26s} "
+              f"seeds={s['seeds']:3d} violations={s['violations']:3d} "
+              f"msgs/step={s['messages_per_step']:6.2f} "
+              f"steps_lost={s['mean_steps_lost']}")
+    for r in scale_rows:
+        print(f"scale {r['policy']:12s} n_workers={r['n_workers']:3d} "
+              f"seed={r['seed']} msgs/step={r['messages_per_step']:6.2f}")
+
+    if bad:
+        msg = (f"{len(bad)} lineage-violating cells in consistent policies")
+        print(f"\nFAIL: {msg}:", file=sys.stderr)
+        for r in bad[:10]:
+            print(f"  {r['policy']} / {r['scenario']} / seed {r['seed']}: "
+                  f"{r.get('violation_detail')}", file=sys.stderr)
+        raise FleetMatrixError(msg)
+    if control_expected and not control:
+        msg = ("positive control failed: the inconsistent baseline was "
+               "never flagged under partition scenarios — is the lineage "
+               "checker vacuous?")
+        print(f"\nFAIL: {msg}", file=sys.stderr)
+        raise FleetMatrixError(msg)
+    if "leaseguard" in load and "quorum" in load:
+        if load["leaseguard"] > load["quorum"] * LOAD_RATIO_MAX:
+            msg = (f"message-load contract failed: leaseguard "
+                   f"{load['leaseguard']} msgs/step is not ≪ quorum "
+                   f"{load['quorum']}")
+            print(f"\nFAIL: {msg}", file=sys.stderr)
+            raise FleetMatrixError(msg)
+    print(f"\n# zero lineage violations across {len(consistent)} consistent "
+          f"policies"
+          + (f"; inconsistent baseline flagged in {len(control)} cells"
+             if control_expected or control else "")
+          + (f"; calm msgs/step {load}" if load else ""))
+    return summary
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except FleetMatrixError:
+        sys.exit(1)

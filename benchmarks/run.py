@@ -21,7 +21,7 @@ from repro.core import RaftParams, SimParams, run_workload
 
 from . import (fault_matrix, fig5_lease_duration, fig6_latency,
                fig7_availability, fig8_skewness, fig11_scalability,
-               gray_matrix, simperf)
+               fleet_matrix, gray_matrix, simperf)
 from .common import emit
 
 MATRIX_SEED = 42
@@ -82,6 +82,9 @@ FIGS = {
     # resilience-variant x gray/corruption scenario sweep ->
     # BENCH_gray_matrix.json (--quick runs the CI smoke slice)
     "gray_matrix": gray_matrix.run,
+    # policy x fleet-scenario x seed checkpoint-lineage sweep + scale
+    # sweep -> BENCH_fleet_matrix.json (--quick runs the CI smoke slice)
+    "fleet_matrix": fleet_matrix.run,
     # simulator wall-time baseline -> BENCH_simperf.json
     # (--quick runs the smoke slice and checks for >30% regression)
     "simperf": simperf.run,

@@ -16,10 +16,153 @@ from typing import Any, Optional, Union
 
 from ..consistency import resolve_read_mode
 from ..core import (Cluster, RaftParams, ReadMode, SimParams, build_cluster)
+from ..core.prob import PRNG
+from ..core.raft import Node, ReadResult, WriteResult
+from ..core.simulate import TimeoutError_, wait_for
 
 
 class CoordinatorError(RuntimeError):
     pass
+
+
+class CoordClient:
+    """Event-loop-native client path: awaitable KV operations for actors
+    that live *on* the simulated loop (the fleet simulator's training
+    workers), beside the crank-based :class:`LocalCoordinator` for
+    wall-clock callers. Any number of clients can have operations in
+    flight concurrently; values share the coordinator's JSON encoding so
+    both paths read each other's keys.
+
+    Operations retry across leader failovers until an op deadline, then
+    report failure instead of raising — a worker that cannot reach the
+    control plane keeps training (the paper's point: polls are advisory,
+    not on the critical path). ``append`` stops retrying the moment an
+    attempt is *ambiguous* (an entry was appended but not confirmed)
+    unless the record is idempotent; non-idempotent callers confirm by
+    reading back, which is how the fleet chief avoids duplicate manifests.
+
+    ``read_any_fraction`` routes that fraction of reads to a random live
+    non-leader replica (same idiom as the workload's
+    ``follower_read_fraction``) — used to model clients of the
+    ``inconsistent`` policy actually hitting stale replicas.
+    """
+
+    def __init__(self, cluster: Cluster, prng: Optional[PRNG] = None,
+                 op_timeout: float = 0.5, retry_delay: float = 0.05,
+                 read_any_fraction: float = 0.0) -> None:
+        self.cluster = cluster
+        self.prng = prng
+        self.op_timeout = op_timeout
+        self.retry_delay = retry_delay
+        self.read_any_fraction = read_any_fraction
+        self.appends_ok = 0
+        self.appends_failed = 0
+        self.reads_ok = 0
+        self.reads_failed = 0
+        self.retries = 0
+
+    @property
+    def loop(self):
+        return self.cluster.loop
+
+    @staticmethod
+    def decode(raw: list) -> list:
+        return [json.loads(v) for v in raw]
+
+    def _leader_node(self) -> Optional[Node]:
+        lid = self.cluster.directory.leader_id
+        if lid is None:
+            return None
+        node = self.cluster.nodes.get(lid)
+        if node is None or not node.alive:
+            return None
+        return node
+
+    def _read_target(self) -> Optional[Node]:
+        leader = self._leader_node()
+        frac = self.read_any_fraction
+        if frac <= 0.0 or self.prng is None or self.prng.random() >= frac:
+            return leader
+        others = [n for _, n in sorted(self.cluster.nodes.items())
+                  if n.alive and n is not leader]
+        if not others:
+            return leader
+        return others[self.prng.randint(0, len(others) - 1)]
+
+    async def append(self, key: str, value: Any, idempotent: bool = False,
+                     timeout: Optional[float] = None) -> WriteResult:
+        """Replicated append; returns the raft :class:`WriteResult` (the
+        caller may hold ``.entry`` — its ``execution_ts`` resolves
+        ambiguous outcomes omnisciently, as the workload checker does).
+        Retries safe failures (nothing appended) until the deadline;
+        ambiguous failures retry only when ``idempotent=True``."""
+        payload = json.dumps(value)
+        deadline = self.loop.now + (self.op_timeout if timeout is None
+                                    else timeout)
+        last = WriteResult(False, "unavailable")
+        while True:
+            node = self._leader_node()
+            if node is not None:
+                try:
+                    last = await wait_for(
+                        self.loop.create_task(node.client_write(key, payload)),
+                        max(1e-9, deadline - self.loop.now))
+                except TimeoutError_:
+                    # The in-flight write may still commit; it is ambiguous
+                    # but we no longer hold its entry — callers confirm by
+                    # reading back.
+                    last = WriteResult(False, "client_timeout")
+                if last.ok:
+                    self.appends_ok += 1
+                    return last
+                ambiguous = last.entry is not None or last.error == "client_timeout"
+                if ambiguous and not idempotent:
+                    self.appends_failed += 1
+                    return last
+            if self.loop.now >= deadline:
+                self.appends_failed += 1
+                return last
+            self.retries += 1
+            await self.loop.sleep(self.retry_delay)
+
+    async def read_raw(self, key: str,
+                       timeout: Optional[float] = None) -> ReadResult:
+        """Read via the configured policy; ``.value`` is the raw (encoded)
+        list — ``decode()`` it, or scan it lazily from the tail."""
+        deadline = self.loop.now + (self.op_timeout if timeout is None
+                                    else timeout)
+        while True:
+            node = self._read_target()
+            if node is not None:
+                try:
+                    res = await wait_for(
+                        self.loop.create_task(node.client_read(key)),
+                        max(1e-9, deadline - self.loop.now))
+                except TimeoutError_:
+                    res = ReadResult(False, error="client_timeout")
+                if res.ok:
+                    self.reads_ok += 1
+                    return res
+            if self.loop.now >= deadline:
+                self.reads_failed += 1
+                return ReadResult(False, error="unavailable")
+            self.retries += 1
+            await self.loop.sleep(self.retry_delay)
+
+    async def read_list(self, key: str,
+                        timeout: Optional[float] = None) -> Optional[list]:
+        """Decoded read, or None when the control plane is unavailable."""
+        res = await self.read_raw(key, timeout=timeout)
+        if not res.ok:
+            return None
+        return self.decode(res.value)
+
+    def stats(self) -> dict:
+        return {"appends_ok": self.appends_ok,
+                "appends_failed": self.appends_failed,
+                "reads_ok": self.reads_ok,
+                "reads_failed": self.reads_failed,
+                "retries": self.retries}
 
 
 class LocalCoordinator:

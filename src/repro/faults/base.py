@@ -145,7 +145,14 @@ class Scenario:
         ``run_workload(fault_script=scenario.install)``."""
         ctx = FaultContext(cluster)
         self.ctx = ctx
+        self._schedule(ctx)
+        return ctx
 
+    def _schedule(self, ctx: FaultContext) -> None:
+        """Schedule the windows against an already-built context.
+        Subclasses (the fleet's :class:`~repro.fleet.faults.FleetScenario`)
+        install a richer context and reuse this scheduler unchanged."""
+        cluster = ctx.cluster
         for w in self.windows:
             def fire(w=w) -> None:
                 ctx.note(f"start {w.fault.name}")
@@ -158,7 +165,6 @@ class Scenario:
                     w.fault.stop(ctx)
 
                 cluster.loop.call_later(w.until, cease)
-        return ctx
 
     def __repr__(self) -> str:
         return (f"Scenario({self.name!r}, {len(self.windows)} windows, "

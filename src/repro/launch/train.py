@@ -90,6 +90,7 @@ def run_training(cfg: ArchConfig, shape: ShapeConfig, steps: int,
         dt = time.time() - t0
         losses.append(loss)
         registry.report_step_time(worker_id, step, dt)
+        registry.heartbeat(worker_id)   # feeds live_workers(ttl=...)
         if failover_at is not None and step == failover_at:
             crashed = registry.coord.crash_leader()
             print(f"[train] coordinator leader {crashed} crashed at step "

@@ -1,0 +1,170 @@
+"""Fleet simulator: lineage safety under chaos, chief failover, the
+positive control, determinism, and the leaseguard vs quorum load gap."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.consistency import resolve_read_mode
+from repro.core import RaftParams, SimParams
+from repro.fleet import (FleetParams, FleetScenario, build_fleet_scenario,
+                         check_lineage, fleet_scenario_names, run_fleet)
+
+
+def raftp(policy: str) -> RaftParams:
+    return RaftParams(n_nodes=3, read_mode=resolve_read_mode(policy),
+                      election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6,
+                      rpc_timeout=0.15)
+
+
+def fleet_run(policy: str, scenario: str, seed: int, **fp):
+    return run_fleet(raftp(policy), SimParams(seed=seed),
+                     FleetParams(**fp), build_fleet_scenario(scenario))
+
+
+def test_calm_fleet_trains_and_checkpoints():
+    res = fleet_run("leaseguard", "calm", seed=1)
+    assert res.violations == []
+    assert res.n_claims == 1                    # one chief, never deposed
+    assert res.n_manifests == res.n_valid_manifests > 10
+    assert res.total_steps > 1000
+    assert res.polls_failed == 0 and res.stale_polls == 0
+    # every worker boot-restored exactly once, plus the chief's takeover
+    boots = [r for r in res.restores_detail if r["kind"] == "boot"]
+    assert len(boots) == 8
+
+
+def test_chief_kill_elects_successor():
+    res = fleet_run("leaseguard", "chief_kill", seed=1)
+    assert res.violations == []
+    assert len(res.chief_deaths) == 1
+    d = res.chief_deaths[0]
+    assert d["recovery_time"] is not None       # a successor committed
+    assert d["steps_lost"] >= 0
+    assert res.n_claims >= 2                    # takeover claimed a new epoch
+    takeovers = [r for r in res.restores_detail if r["kind"] == "takeover"]
+    assert len(takeovers) >= 2
+
+
+def test_worker_crashes_rejoin_and_restore():
+    res = fleet_run("leaseguard", "worker_crashes", seed=2)
+    assert res.violations == []
+    rejoins = [r for r in res.restores_detail if r["kind"] == "rejoin"]
+    assert rejoins, "crashed workers must restore on rejoin"
+    for r in rejoins:
+        assert r["manifest"] is not None        # restored a real checkpoint
+
+
+def test_leader_crash_mid_commit_keeps_lineage():
+    for policy in ("leaseguard", "quorum"):
+        res = fleet_run(policy, "leader_crash_mid_commit", seed=1)
+        assert res.violations == [], (policy, res.violations)
+        assert res.n_manifests > 50             # the storm really stormed
+
+
+def test_chief_and_leader_die_together():
+    res = fleet_run("leaseguard", "chief_and_leader_die", seed=3)
+    assert res.violations == []
+    assert len(res.chief_deaths) == 1
+
+
+def test_stragglers_flagged_by_registry():
+    res = fleet_run("leaseguard", "straggler_band", seed=1)
+    assert res.violations == []
+    flagged = {w for w, slow in res.straggler_flags.items() if slow}
+    assert flagged, "4x-slow workers must trip the straggler table"
+    assert len(flagged) <= 3                    # and only the slowed band
+
+
+def test_inconsistent_positive_control():
+    hits = []
+    for seed in (1, 3):
+        res = fleet_run("inconsistent", "partition_churn", seed=seed,
+                        read_any_fraction=0.3)
+        hits.extend(res.violations)
+    assert hits, "stale replicas must produce lineage violations"
+    assert all(v["check"] in ("stale_restore", "fork", "durability")
+               for v in hits)
+
+
+def test_fleet_run_deterministic():
+    a = fleet_run("leaseguard", "chief_kill", seed=2)
+    b = fleet_run("leaseguard", "chief_kill", seed=2)
+    assert a.summarize() == b.summarize()
+    assert a.total_steps == b.total_steps
+    assert a.messages == b.messages
+
+
+def test_leaseguard_poll_load_much_lighter_than_quorum():
+    lg = fleet_run("leaseguard", "calm", seed=1)
+    qr = fleet_run("quorum", "calm", seed=1)
+    assert lg.violations == [] and qr.violations == []
+    assert lg.messages_per_step * 2 < qr.messages_per_step
+
+
+def test_checkpoint_storm_floods_manifests():
+    calm = fleet_run("leaseguard", "calm", seed=1)
+    storm = fleet_run("leaseguard", "checkpoint_storm", seed=1)
+    assert storm.violations == []
+    assert storm.n_manifests > 3 * calm.n_manifests
+
+
+def test_fleet_scenario_refuses_plain_install():
+    sc = build_fleet_scenario("calm")
+    assert isinstance(sc, FleetScenario)
+    with pytest.raises(RuntimeError):
+        sc.install(object())
+
+
+def test_scenario_registry_names():
+    names = fleet_scenario_names()
+    assert "calm" in names and "partition_churn" in names
+    assert "leader_crash_mid_commit" in names   # combined control+data
+
+
+# ------------------------------------------------ checker unit tests
+def _man(epoch, chief, step, ts, parent=None):
+    return ({"kind": "manifest", "epoch": epoch, "chief": chief,
+             "step": step, "parent": parent if parent is not None else step,
+             "id": f"{chief}:{epoch}:{step}"}, ts)
+
+
+def _claim(epoch, chief, ts):
+    return ({"kind": "claim", "epoch": epoch, "chief": chief}, ts)
+
+
+def test_checker_fencing_invalidates_deposed_chief():
+    entries = [_claim(1, "w0", 0.1), _man(1, "w0", 5, 0.2),
+               _claim(2, "w1", 0.3),
+               _man(1, "w0", 10, 0.4),         # deposed chief: fenced out
+               _man(2, "w1", 7, 0.5)]
+    assert check_lineage(entries, []) == []
+
+
+def test_checker_catches_fork():
+    entries = [_claim(1, "w0", 0.1), _man(1, "w0", 10, 0.2),
+               _claim(2, "w1", 0.3), _man(2, "w1", 4, 0.4)]
+    v = check_lineage(entries, [])
+    assert [x["check"] for x in v] == ["fork"]
+
+
+def test_checker_catches_stale_restore():
+    entries = [_claim(1, "w0", 0.1), _man(1, "w0", 5, 0.2),
+               _man(1, "w0", 10, 0.3)]
+    stale = {"wid": "w3", "kind": "rejoin", "t_start": 1.0, "t_end": 1.1,
+             "manifest": entries[1][0]}        # saw step 5, bound is 10
+    v = check_lineage(entries, [stale])
+    assert [x["check"] for x in v] == ["stale_restore"]
+    fresh = {"wid": "w3", "kind": "rejoin", "t_start": 1.0, "t_end": 1.1,
+             "manifest": entries[2][0]}
+    assert check_lineage(entries, [fresh]) == []
+
+
+def test_checker_catches_phantom_restore():
+    entries = [_claim(1, "w0", 0.1), _man(1, "w0", 5, 0.2)]
+    phantom = {"wid": "w1", "kind": "boot", "t_start": 0.3, "t_end": 0.4,
+               "manifest": {"kind": "manifest", "epoch": 9, "chief": "wx",
+                            "step": 99, "parent": 0, "id": "wx:9:99"}}
+    v = check_lineage(entries, [phantom])
+    assert any(x["check"] == "durability" for x in v)

@@ -1,0 +1,95 @@
+"""coord/registry edge cases: the event-log membership fold (rejoin),
+heartbeat TTL liveness, and per-worker straggler windowing."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.coord.kvstore import LocalCoordinator
+from repro.coord.registry import (ClusterRegistry, fold_members, live_from,
+                                  straggler_flags_from)
+
+
+# ------------------------------------------------- pure fold helpers
+def test_fold_members_rejoin_order():
+    events = [
+        {"ev": "join", "id": "w0", "t": 0.0},
+        {"ev": "leave", "id": "w0", "t": 1.0},
+        {"ev": "join", "id": "w0", "t": 2.0},   # the rejoin a set
+    ]                                           # difference would kill
+    assert set(fold_members(events)) == {"w0"}
+    assert live_from(events) == {"w0"}
+
+
+def test_fold_members_leave_wins_in_log_order():
+    events = [
+        {"ev": "join", "id": "w0", "t": 5.0},   # wall times lie; LOG
+        {"ev": "leave", "id": "w0", "t": 1.0},  # order is the truth
+    ]
+    assert live_from(events) == set()
+
+
+def test_heartbeat_only_refreshes_registered_workers():
+    events = [{"ev": "hb", "id": "ghost", "t": 1.0},
+              {"ev": "join", "id": "w0", "t": 1.0},
+              {"ev": "leave", "id": "w0", "t": 2.0},
+              {"ev": "hb", "id": "w0", "t": 3.0}]
+    assert live_from(events) == set()
+    assert live_from(events, now=3.0, ttl=10.0) == set()
+
+
+def test_ttl_liveness_from_heartbeats():
+    events = [{"ev": "join", "id": "w0", "t": 0.0},
+              {"ev": "join", "id": "w1", "t": 0.0},
+              {"ev": "hb", "id": "w0", "t": 5.0}]
+    assert live_from(events, now=5.2, ttl=1.0) == {"w0"}     # w1 expired
+    assert live_from(events, now=5.2, ttl=None) == {"w0", "w1"}
+
+
+def test_single_worker_median_not_self_flagged():
+    reports = [{"id": "w0", "step": i, "s": 1.0} for i in range(5)]
+    assert straggler_flags_from(reports) == {"w0": False}
+
+
+def test_per_worker_window_keeps_slow_reporters():
+    # the old global [-window:] slice: 200 fast reports would evict the
+    # slow worker's 3 reports from the sample entirely
+    reports = ([{"id": "slow", "step": i, "s": 3.0} for i in range(3)]
+               + [{"id": "fast", "step": i, "s": 1.0} for i in range(200)])
+    flags = straggler_flags_from(reports, threshold=1.5, window=64)
+    assert flags == {"slow": True, "fast": False}
+
+
+def test_straggler_flag_flips_after_recovery():
+    slow = [{"id": "w0", "step": i, "s": 4.0} for i in range(10)]
+    fast = [{"id": "w1", "step": i, "s": 1.0} for i in range(10)]
+    assert straggler_flags_from(slow + fast, window=64)["w0"] is True
+    # w0 recovers: a full window of fast reports displaces the slow ones
+    recovered = [{"id": "w0", "step": 10 + i, "s": 1.0} for i in range(64)]
+    flags = straggler_flags_from(slow + fast + recovered, window=64)
+    assert flags["w0"] is False
+
+
+# ------------------------------------------- through the coordinator
+@pytest.fixture(scope="module")
+def registry():
+    return ClusterRegistry(LocalCoordinator(seed=7))
+
+
+def test_registry_rejoin_after_leave(registry):
+    registry.register_worker("r0")
+    registry.deregister_worker("r0")
+    assert "r0" not in registry.live_workers()
+    registry.register_worker("r0")
+    assert "r0" in registry.live_workers()
+
+
+def test_registry_heartbeat_ttl_expiry(registry):
+    registry.register_worker("h0")
+    registry.register_worker("h1")
+    loop = registry.coord.cluster.loop
+    loop.run_until(loop.now + 2.0)          # both join-times age out
+    registry.heartbeat("h0")
+    live = registry.live_workers(ttl=1.0)
+    assert "h0" in live and "h1" not in live
+    assert {"h0", "h1"} <= registry.live_workers()   # no TTL: membership

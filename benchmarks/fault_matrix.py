@@ -83,8 +83,19 @@ def policy_configs() -> dict[str, dict]:
 
 
 def run_cell(policy: str, scenario_name: str, seed: int,
-             warm_start: bool = False) -> dict:
-    """One deterministic run; returns a JSON-ready row."""
+             warm_start: bool = False, trace: bool = False,
+             trace_dir: str = None) -> dict:
+    """One deterministic run; returns a JSON-ready row.
+
+    ``trace=True`` records the cell with the flight recorder
+    (``repro.obs``) — the row gains the lease-probe verdict and a
+    compact forensic digest, and ``trace_dir`` (if given) receives the
+    full JSONL + Chrome-trace dumps. Tracing never draws from any PRNG,
+    so traced rows carry the exact same history-derived fields as
+    untraced ones. Untraced cells that the checker flags are re-run
+    traced (identical replay) so the committed artifact embeds the
+    digest naming the causal election/partition for every violation.
+    """
     flags, sim_flags = split_bench_config(policy_configs()[policy])
     sc = build_scenario(scenario_name)
     # a scenario may require RaftParams flags for its expect_safe
@@ -96,7 +107,8 @@ def run_cell(policy: str, scenario_name: str, seed: int,
     sim = SimParams(seed=seed, sim_duration=SIM_DURATION, interarrival=3e-3,
                     write_fraction=1 / 3, **sim_flags)
     res = run_workload(raft, sim, fault_script=sc.install, check=False,
-                       settle_time=SETTLE_TIME, warm_start=warm_start)
+                       settle_time=SETTLE_TIME, warm_start=warm_start,
+                       trace=trace)
     try:
         checked = check_linearizability(res.history)
         violation = None
@@ -110,7 +122,7 @@ def run_cell(policy: str, scenario_name: str, seed: int,
     # policy recovers) are visible in the artifact, not just verdicts
     bins = throughput_timeline(res.history, TIMELINE_BIN, res.t_start,
                                res.t_start + SIM_DURATION + SETTLE_TIME)
-    return {
+    row = {
         "policy": policy,
         "scenario": scenario_name,
         "seed": seed,
@@ -128,16 +140,56 @@ def run_cell(policy: str, scenario_name: str, seed: int,
             "fail": [b["read_fail"] + b["write_fail"] for b in bins],
         },
     }
+    if trace:
+        row.update(_trace_fields(policy, scenario_name, seed, sc, res,
+                                 res.trace or [], trace_dir))
+    elif violation:
+        # forensic rerun: tracing is draw-order-neutral, so the traced
+        # rerun replays this exact history and the digest pins the
+        # causal election/partition behind the flagged violation
+        from repro.obs.explain import trace_digest
+        tres = run_workload(raft, sim,
+                            fault_script=build_scenario(scenario_name).install,
+                            check=False, settle_time=SETTLE_TIME,
+                            warm_start=warm_start, trace=True)
+        row["trace_digest"] = trace_digest(tres.trace or [],
+                                           tres.t_start, tres.t_end)
+    return row
 
 
-def _cell_args(policies, scenarios, seeds, warm_start=False):
-    return [(p, s, seed, warm_start) for p in policies for s in scenarios
-            for seed in seeds]
+def _trace_fields(policy: str, scenario_name: str, seed: int, sc, res,
+                  events: list, trace_dir: str = None) -> dict:
+    from repro.obs import at_most_one_lease_holder
+    from repro.obs.explain import trace_digest
+    probe = at_most_one_lease_holder(events)
+    out = {
+        "trace_events": len(events),
+        "lease_probe_violations": len(probe),
+        "trace_digest": trace_digest(events, res.t_start, res.t_end),
+    }
+    if trace_dir:
+        from repro.obs.export import write_chrome_trace, write_jsonl
+        d = Path(trace_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        stem = f"{policy}__{scenario_name}__s{seed}"
+        write_jsonl(events, d / f"{stem}.jsonl", policy=policy,
+                    scenario=scenario_name, seed=seed,
+                    expect_safe=sc.expect_safe)
+        write_chrome_trace(events, d / f"{stem}.chrome.json", t_end=res.t_end)
+        out["trace_file"] = str(d / f"{stem}.jsonl")
+    return out
+
+
+def _cell_args(policies, scenarios, seeds, warm_start=False, trace=False,
+               trace_dir=None):
+    return [(p, s, seed, warm_start, trace, trace_dir)
+            for p in policies for s in scenarios for seed in seeds]
 
 
 def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
                jobs: int = 1, progress: bool = True,
-               warm_start: bool = False) -> list[dict]:
+               warm_start: bool = False, trace: bool = False,
+               trace_dir: str = None) -> list[dict]:
     """Run the cube; byte-identical output for any ``jobs``.
 
     Parallel runs shard the canonical cell list round-robin (cell i ->
@@ -145,7 +197,8 @@ def run_matrix(policies: list[str], scenarios: list[str], seeds: list[int],
     shards are de-interleaved back into canonical cell order before the
     final canonical sort — every cell is an independent deterministic
     simulation, so only ordering could differ, and ordering is pinned."""
-    cells = _cell_args(policies, scenarios, seeds, warm_start)
+    cells = _cell_args(policies, scenarios, seeds, warm_start, trace,
+                       trace_dir)
     if jobs > 1:
         from concurrent.futures import ProcessPoolExecutor
         shards = [cells[k::jobs] for k in range(jobs)]
@@ -255,12 +308,22 @@ def main(argv=None) -> list[dict]:
                          "(policy) across seeds; writes "
                          "BENCH_fault_matrix_warm.json and checks verdict "
                          "parity against the committed cold artifact")
+    ap.add_argument("--trace", action="store_true",
+                    help="record every cell with the flight recorder "
+                         "(repro.obs): rows gain lease-probe verdicts + "
+                         "forensic digests, and the probe is enforced on "
+                         "consistent policies under safe scenarios")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="also dump per-cell JSONL + Chrome traces to DIR "
+                         "(implies --trace)")
     ap.add_argument("--jobs", type=int,
                     default=max(1, (os.cpu_count() or 2) - 1))
     ap.add_argument("--out", default=None,
                     help="artifact path (default: BENCH_fault_matrix.json; "
                          "reduced slices go to BENCH_fault_matrix_smoke.json)")
     args = ap.parse_args(argv)
+    if args.trace_dir:
+        args.trace = True
 
     all_policies = list(policy_configs())
     scenarios = safe_scenario_names()
@@ -286,7 +349,7 @@ def main(argv=None) -> list[dict]:
     # the committed artifact; every reduced/expanded slice goes to the
     # smoke path unless --out says otherwise
     full_cube = (not args.smoke and not args.scenarios and not args.policies
-                 and not args.include_unsafe
+                 and not args.include_unsafe and not args.trace
                  and args.seeds >= DEFAULT_SEEDS)
     if args.warm_start:
         out_path = args.out or str(WARM_OUT_PATH if full_cube
@@ -297,10 +360,12 @@ def main(argv=None) -> list[dict]:
     n = len(policies) * len(scenarios) * len(seeds)
     print(f"# fault matrix: {len(policies)} policies x {len(scenarios)} "
           f"scenarios x {len(seeds)} seeds = {n} cells "
-          f"(jobs={args.jobs}{', warm-start' if args.warm_start else ''})",
+          f"(jobs={args.jobs}{', warm-start' if args.warm_start else ''}"
+          f"{', traced' if args.trace else ''})",
           file=sys.stderr)
     rows = run_matrix(policies, scenarios, seeds, jobs=args.jobs,
-                      warm_start=args.warm_start)
+                      warm_start=args.warm_start, trace=args.trace,
+                      trace_dir=args.trace_dir)
     summary = summarize(rows)
 
     consistent = [p for p in policies if p not in NON_LINEARIZABLE]
@@ -366,6 +431,23 @@ def main(argv=None) -> list[dict]:
                "vacuous?")
         print(f"\nFAIL: {msg}", file=sys.stderr)
         raise FaultMatrixError(msg)
+    if args.trace:
+        # second, mechanism-level safety net: the offline lease probe must
+        # clear every consistent-policy cell inside the fault model
+        probe_bad = [r for r in rows
+                     if r.get("lease_probe_violations")
+                     and r["policy"] in consistent and r["scenario"] in safe]
+        if probe_bad:
+            msg = (f"lease probe: {len(probe_bad)} consistent-policy cells "
+                   f"show overlapping exclusive lease windows")
+            print(f"\nFAIL: {msg}:", file=sys.stderr)
+            for r in probe_bad[:10]:
+                print(f"  {r['policy']} / {r['scenario']} / seed "
+                      f"{r['seed']}", file=sys.stderr)
+            raise FaultMatrixError(msg)
+        print(f"# lease probe: 0 violations across "
+              f"{sum(1 for r in rows if r['policy'] in consistent and r['scenario'] in safe)} "
+              f"consistent-policy traced cells")
     print(f"\n# zero violations across {len(consistent)} consistent "
           f"policies"
           + (f"; inconsistent baseline flagged in {len(control)} cells"

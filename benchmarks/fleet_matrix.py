@@ -92,6 +92,16 @@ def run_cell(policy: str, scenario_name: str, seed: int) -> dict:
     # full violation detail only when something fired (rows stay compact)
     if res.violations:
         row["violation_detail"] = res.violations[:10]
+        # identical traced replay (tracing draws nothing from any PRNG):
+        # the digest names the election/partition behind the lineage break
+        from repro.obs.explain import trace_digest
+        tres = run_fleet(_raft(policy, sc.raft_overrides),
+                         SimParams(seed=seed), _fleet_params(policy),
+                         build_fleet_scenario(scenario_name), trace=True)
+        ev = tres.events
+        t0 = ev[0]["t"] if ev else 0.0
+        t1 = ev[-1]["t"] if ev else 0.0
+        row["trace_digest"] = trace_digest(ev, t0, t1)
     return row
 
 

@@ -87,7 +87,7 @@ def run_cell(variant: str, scenario_name: str, seed: int) -> dict:
     fail = res.reads_fail + res.writes_fail
     bins = throughput_timeline(res.history, TIMELINE_BIN, res.t_start,
                                res.t_start + SIM_DURATION + SETTLE_TIME)
-    return {
+    row = {
         "variant": variant,
         "scenario": scenario_name,
         "seed": seed,
@@ -97,6 +97,10 @@ def run_cell(variant: str, scenario_name: str, seed: int) -> dict:
         "checked_ops": checked,
         "violation": violation,
         **res.raft_stats,
+        # per-node attribution of the summed counters above: WHICH node
+        # burned the terms / got evicted (the flapping one, or a healthy
+        # victim?) — the summed raft_stats can't say
+        "raft_by_node": res.raft_by_node,
         "timeline": {
             "bin_size": TIMELINE_BIN,
             "t0": round(res.t_start, 9),
@@ -104,6 +108,15 @@ def run_cell(variant: str, scenario_name: str, seed: int) -> dict:
             "fail": [b["read_fail"] + b["write_fail"] for b in bins],
         },
     }
+    if violation:
+        # identical traced replay -> digest naming the causal election
+        from repro.obs.explain import trace_digest
+        tres = run_workload(raft, sim,
+                            fault_script=build_scenario(scenario_name).install,
+                            check=False, settle_time=SETTLE_TIME, trace=True)
+        row["trace_digest"] = trace_digest(tres.trace or [],
+                                           tres.t_start, tres.t_end)
+    return row
 
 
 def run_matrix(variants: list[str], scenarios: list[str], seeds: list[int],

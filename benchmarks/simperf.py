@@ -62,6 +62,9 @@ PRE_PR_S_PER_CELL = 0.1008
 THROUGHPUT_POLICIES = ("inconsistent", "quorum", "readindex", "leaseguard")
 
 REGRESSION_TOLERANCE = 1.30     # --check fails beyond +30%
+#: flight-recorder budget: tracing ON may cost at most this fraction
+#: extra per cell (and OFF must be free — it rides on every run)
+TRACE_OVERHEAD_MAX = 0.10
 
 
 def calibrate() -> float:
@@ -97,6 +100,55 @@ def measure_matrix(repeat: int) -> dict:
         "pre_pr_s_per_cell": PRE_PR_S_PER_CELL,
         "cold_speedup_vs_pre_pr": round(PRE_PR_S_PER_CELL / (cold_best / n), 3),
         "warm_speedup_vs_pre_pr": round(PRE_PR_S_PER_CELL / (warm_best / n), 3),
+    }
+
+
+def measure_trace_overhead(repeat: int) -> dict:
+    """Recording cost of the flight recorder (repro.obs) over the
+    reference SLICE: the same ``run_workload`` calls untraced vs traced,
+    no checker and no post-run analysis — isolating the instrumentation
+    cost every traced run pays. Both passes run in one process back to
+    back, so the *ratio* is machine-independent and ``--check`` can
+    enforce it absolutely (< TRACE_OVERHEAD_MAX)."""
+    from repro.faults import build_scenario
+
+    def one_pass(trace: bool) -> float:
+        def go():
+            for p, s, seed in SLICE:
+                flags, sim_flags = split_bench_config(policy_configs()[p])
+                sc = build_scenario(s)
+                raft = RaftParams(election_timeout=0.3, election_jitter=0.1,
+                                  heartbeat_interval=0.03, lease_duration=0.6,
+                                  rpc_timeout=0.15,
+                                  **{**flags, **sc.raft_overrides})
+                sim = SimParams(seed=seed, sim_duration=1.2,
+                                interarrival=3e-3, write_fraction=1 / 3,
+                                **sim_flags)
+                run_workload(raft, sim, fault_script=sc.install, check=False,
+                             settle_time=1.5, trace=trace)
+        return _timed(go)
+
+    # warm BOTH code paths (the tracer's emit path and its event-list
+    # allocations are cold on first use — measuring it unwarmed inflates
+    # the ratio several-fold), then interleave the passes so frequency
+    # drift hits both sides equally
+    one_pass(False)
+    one_pass(True)
+    pairs = [(one_pass(False), one_pass(True)) for _ in range(repeat)]
+    off = min(p[0] for p in pairs)
+    on = min(p[1] for p in pairs)
+    # the enforced ratio is the BEST per-pair ratio: adjacent passes see
+    # the same machine state, so a pair's ratio cancels frequency drift,
+    # and scheduler/GC hiccups are strictly additive — every pair
+    # OVERestimates the intrinsic cost except when a hiccup lands on its
+    # untraced half, so min-of-pairs is the faithful estimate. A real
+    # regression (an expensive emit) inflates every pair and still trips.
+    frac = min(p[1] / p[0] for p in pairs)
+    n = len(SLICE)
+    return {
+        "untraced_s_per_cell": round(off / n, 6),
+        "traced_s_per_cell": round(on / n, 6),
+        "trace_overhead_frac": round(max(0.0, frac - 1.0), 4),
     }
 
 
@@ -149,6 +201,7 @@ def build_artifact(repeat: int) -> dict:
         "calibration_s": round(calib, 6),
         "repeat": repeat,
         "matrix": matrix,
+        "trace": measure_trace_overhead(repeat),
         "throughput": measure_throughput(repeat),
     }
 
@@ -178,6 +231,15 @@ def check_regression(artifact: dict, baseline_path: Path) -> list[str]:
                 f"{raw_ref * 1e3:.1f} (+{(raw_now / raw_ref - 1) * 100:.0f}%)"
                 f", normalized {cal_now} vs {cal_ref} "
                 f"(+{(cal_now / cal_ref - 1) * 100:.0f}%); budget +30%")
+    # the flight-recorder budget is absolute (self-ratio, machine-free):
+    # tracing must cost < TRACE_OVERHEAD_MAX per cell when enabled
+    tr = artifact.get("trace")
+    if tr is not None and tr["trace_overhead_frac"] > TRACE_OVERHEAD_MAX:
+        problems.append(
+            f"trace: +{tr['trace_overhead_frac'] * 100:.1f}% per traced "
+            f"cell ({tr['untraced_s_per_cell'] * 1e3:.1f} -> "
+            f"{tr['traced_s_per_cell'] * 1e3:.1f} ms); budget "
+            f"+{TRACE_OVERHEAD_MAX * 100:.0f}%")
     return problems
 
 
@@ -211,6 +273,10 @@ def main(argv=None) -> dict:
           f"({m['cold_speedup_vs_pre_pr']:.2f}x vs pre-optimization)")
     print(f"matrix cell (warm): {m['warm_s_per_cell'] * 1e3:7.1f} ms "
           f"({m['warm_speedup_vs_pre_pr']:.2f}x vs pre-optimization)")
+    tr = artifact["trace"]
+    print(f"matrix cell (traced): {tr['traced_s_per_cell'] * 1e3:5.1f} ms "
+          f"(+{tr['trace_overhead_frac'] * 100:.1f}% vs untraced "
+          f"{tr['untraced_s_per_cell'] * 1e3:.1f} ms)")
     for r in artifact["throughput"]:
         print(f"{r['policy']:14s} {r['sim_s_per_wall_s']:7.1f} sim-s/wall-s "
               f"{r['events_per_s']:>9,d} events/s")

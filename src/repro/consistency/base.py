@@ -151,10 +151,16 @@ class ConsistencyPolicy:
         """One empty-AppendEntries round: True iff a majority acked and we
         are still the same-term leader (Raft's read barrier)."""
         n = self.node
+        tr = n.loop.tracer
+        bid = None
+        if tr is not None:
+            bid = tr.emit("barrier", node=n.id, term=n.term,
+                          parent=n._trace_ctx, op="start")
         term0 = n.term
         msg = n._make_append(n.last_log_index, [], n.commit_index)
         futs = [n.net.call(n.id, p, msg) for p in n.peers]
         acks = 1
+        deposed = False
         for f in futs:
             try:
                 reply: AppendEntriesReply = await wait_for(f, n.p.rpc_timeout)
@@ -162,9 +168,15 @@ class ConsistencyPolicy:
                 continue
             if reply.term > n.term:
                 n._step_down(reply.term)
-                return False
+                deposed = True
+                break
             if reply.success:
                 acks += 1
             if acks >= n.majority():
                 break
-        return acks >= n.majority() and n.term == term0 and n.is_leader()
+        ok = (not deposed and acks >= n.majority()
+              and n.term == term0 and n.is_leader())
+        if tr is not None:
+            tr.emit("barrier", node=n.id, term=n.term, parent=bid,
+                    op="ok" if ok else "fail")
+        return ok

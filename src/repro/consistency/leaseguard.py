@@ -58,6 +58,15 @@ class LeaseGuardPolicy(ConsistencyPolicy):
             if n.log[i].term < n.term:
                 self.last_prior_term_index = i
                 break
+        tr = n.loop.tracer
+        if tr is not None:
+            # window derived from values already in hand — no clock reads,
+            # so tracing never perturbs the PRNG draw order
+            e = n.log[n.commit_index]
+            tr.emit("lease", node=n.id, term=n.term, parent=n._trace_ctx,
+                    op="acquire", entry_term=e.term,
+                    until=e.interval.latest + n.p.delta,
+                    limbo=len(self.limbo_keys))
 
     # ------------------------------------------------------------ commit gate
     def gate_commit(self) -> bool:
@@ -78,6 +87,11 @@ class LeaseGuardPolicy(ConsistencyPolicy):
         self._recheck_scheduled = True
         n = self.node
         e = n.log[self.last_prior_term_index]
+        tr = n.loop.tracer
+        if tr is not None:
+            tr.emit("lease", node=n.id, term=n.term, parent=n._trace_ctx,
+                    op="gate_blocked", entry_term=e.term,
+                    until=e.interval.latest + n.p.delta)
         eta = max(0.0, e.interval.latest + n.p.delta - n.loop.now) \
             + 2 * n.clock.max_error + 1e-6
 
@@ -97,6 +111,12 @@ class LeaseGuardPolicy(ConsistencyPolicy):
         n = self.node
         if self.limbo_keys and n.log[n.commit_index].term == n.term:
             self.limbo_keys = set()  # own-term commit ends limbo
+        tr = n.loop.tracer
+        if tr is not None:
+            e = n.log[n.commit_index]
+            tr.emit("lease", node=n.id, term=n.term, parent=n._trace_ctx,
+                    op="extend", entry_term=e.term,
+                    until=e.interval.latest + n.p.delta)
 
     def holds_lease(self) -> bool:
         """Invariant probe (tests only): could this node serve a local read

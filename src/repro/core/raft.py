@@ -174,7 +174,7 @@ class Node:
         "_election_sleep", "_last_peer_ack", "_backoff_fails",
         "_backoff_sleep", "elections_started", "prevote_rounds",
         "leader_evictions", "healthy_evictions", "quorum_step_downs",
-        "checksum_drops",
+        "checksum_drops", "_trace_ctx",
     )
 
     def __init__(self, node_id: int, loop: EventLoop, net: Network,
@@ -255,6 +255,11 @@ class Node:
         self.healthy_evictions = 0   # ... while still reaching a quorum
         self.quorum_step_downs = 0   # voluntary CheckQuorum step-downs
         self.checksum_drops = 0      # corrupted AppendEntries dropped
+
+        # flight recorder context: id of this node's latest role-transition
+        # event (repro.obs) — the causal parent of everything it does.
+        # None until the first role event, and always None when untraced.
+        self._trace_ctx: Optional[int] = None
 
         # bumps on every crash/restart so a timer task from a previous
         # incarnation exits instead of running alongside the new one
@@ -347,6 +352,11 @@ class Node:
 
     # ------------------------------------------------------ crash / restart
     def crash(self) -> None:
+        tr = self.loop.tracer
+        if tr is not None:
+            self._trace_ctx = tr.emit("role", node=self.id, term=self.term,
+                                      parent=self._trace_ctx, role="down",
+                                      reason="crash")
         self.alive = False
         self.state = "follower"
         self._leader_epoch += 1
@@ -423,6 +433,12 @@ class Node:
         from ..consistency import make_policy
         self.policy = make_policy(self)
         self.net.set_down(self.id, False)
+        tr = self.loop.tracer
+        if tr is not None:
+            self._trace_ctx = tr.emit(
+                "role", node=self.id, term=self.term, parent=self._trace_ctx,
+                role="follower",
+                reason="restart_wiped" if wipe_disk else "restart")
         self._timer_gen += 1
         self._wake_election_timer()   # reap any parked prior-gen wakeup
         self.loop.create_task(self._election_timer(self._timer_gen))
@@ -440,11 +456,16 @@ class Node:
         return self.policy.on_message(src, msg)
 
     def _step_down(self, term: int, count_eviction: bool = True) -> None:
+        tr = self.loop.tracer
         if term > self.term:
+            if tr is not None:
+                tr.emit("term_bump", node=self.id, term=term,
+                        parent=self._trace_ctx, prev=self.term)
             self.term = term
             self.voted_for = None
         if self.state != "follower":
-            if self.state == "leader" and count_eviction:
+            was_leader = self.state == "leader"
+            if was_leader and count_eviction:
                 # deposed by a higher term; "healthy" if we could still
                 # reach a quorum — the disruptive-election signature
                 # PreVote/CheckQuorum exist to prevent
@@ -453,6 +474,12 @@ class Node:
                     self.healthy_evictions += 1
             self.state = "follower"
             self._leader_epoch += 1
+            if tr is not None:
+                reason = ("check_quorum" if not count_eviction
+                          else "deposed" if was_leader else "higher_term")
+                self._trace_ctx = tr.emit(
+                    "role", node=self.id, term=self.term,
+                    parent=self._trace_ctx, role="follower", reason=reason)
         self._signal()
 
     def _quorum_connected(self) -> bool:
@@ -482,6 +509,11 @@ class Node:
                 granted = True
                 self.voted_for = msg.candidate
                 self._last_heartbeat = self.loop.now
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("vote", node=self.id, term=self.term,
+                    parent=self._trace_ctx, candidate=msg.candidate,
+                    granted=granted, prevote=False)
         return VoteReply(self.term, granted)
 
     def _handle_prevote(self, src: int, msg: PreVoteRequest) -> PreVoteReply:
@@ -500,6 +532,11 @@ class Node:
                 and self.loop.now - self._last_heartbeat
                 < self.p.election_timeout)
             granted = up_to_date and not heard_leader
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("vote", node=self.id, term=self.term,
+                    parent=self._trace_ctx, candidate=msg.candidate,
+                    granted=granted, prevote=True)
         return PreVoteReply(self.term, granted)
 
     def _handle_append(self, src: int,
@@ -606,6 +643,10 @@ class Node:
         the real campaign would win. While partitioned this keeps
         failing, so a flapping node's term never inflates."""
         self.prevote_rounds += 1
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("election", node=self.id, term=self.term + 1,
+                    parent=self._trace_ctx, kind="prevote")
         term0 = self.term
         msg = PreVoteRequest(self.term + 1, self.id, self.last_log_index,
                              self.log[-1].term)
@@ -644,6 +685,13 @@ class Node:
         self.state = "candidate"
         self.voted_for = self.id
         self._last_heartbeat = self.loop.now
+        tr = self.loop.tracer
+        if tr is not None:
+            self._trace_ctx = tr.emit(
+                "role", node=self.id, term=term, parent=self._trace_ctx,
+                role="candidate", reason="election_timeout")
+            tr.emit("election", node=self.id, term=term,
+                    parent=self._trace_ctx, kind="campaign")
         msg = RequestVote(term, self.id, self.last_log_index, self.log[-1].term)
         votes = 1
         futs = [self.net.call(self.id, p, msg) for p in self.peers]
@@ -676,6 +724,11 @@ class Node:
         self._backoff_fails.clear()
         self.last_index_at_election = self.last_log_index
         self.leader_hint = self.id
+        tr = self.loop.tracer
+        if tr is not None:
+            self._trace_ctx = tr.emit(
+                "role", node=self.id, term=self.term, parent=self._trace_ctx,
+                role="leader", reason="won_election")
         self.policy.on_become_leader()
         if self.p.noop_on_election:
             self._append_local(NOOP, None)
@@ -808,6 +861,10 @@ class Node:
             advanced = True
         if advanced:
             if self.state == "leader":
+                tr = self.loop.tracer
+                if tr is not None:
+                    tr.emit("commit", node=self.id, term=self.term,
+                            parent=self._trace_ctx, index=self.commit_index)
                 self.policy.on_commit_advanced()
             self._signal()
 
@@ -876,10 +933,31 @@ class Node:
     def relinquish_lease(self) -> None:
         """Planned handover (§5.1): commit an end-lease entry, then step down."""
         if self.is_leader():
+            tr = self.loop.tracer
+            if tr is not None:
+                tr.emit("lease", node=self.id, term=self.term,
+                        parent=self._trace_ctx, op="relinquish")
             self._append_local(END_LEASE, None)
 
     # ---------------------------------------------------------- client API
     async def client_write(self, key: str, value: Any) -> WriteResult:
+        tr = self.loop.tracer
+        if tr is None:
+            return await self._client_write(key, value)
+        # traced path: same single awaited coroutine, so scheduling (and
+        # with it every PRNG draw) is identical to the untraced path
+        sid = tr.emit("write", node=self.id, term=self.term,
+                      parent=self._trace_ctx, op="start", key=key)
+        res = await self._client_write(key, value)
+        if res.ok:
+            tr.emit("write", node=self.id, term=self.term, parent=sid,
+                    op="done", key=key)
+        else:
+            tr.emit("write", node=self.id, term=self.term, parent=sid,
+                    op="fail", key=key, error=res.error)
+        return res
+
+    async def _client_write(self, key: str, value: Any) -> WriteResult:
         if not self.is_leader():
             return WriteResult(False, "not_leader")
         err = self.policy.gate_write()
@@ -902,7 +980,21 @@ class Node:
         return WriteResult(False, "crashed", entry=entry)
 
     async def client_read(self, key: str) -> ReadResult:
-        return await self.policy.gate_read(key)
+        tr = self.loop.tracer
+        if tr is None:
+            return await self.policy.gate_read(key)
+        t0 = self.loop.now
+        sid = tr.emit("read", node=self.id, term=self.term,
+                      parent=self._trace_ctx, op="start", key=key)
+        res = await self.policy.gate_read(key)
+        if res.ok:
+            tr.emit("read", node=self.id, term=self.term, parent=sid,
+                    op="done", key=key, stall=self.loop.now - t0)
+        else:
+            tr.emit("read", node=self.id, term=self.term, parent=sid,
+                    op="fail", key=key, error=res.error,
+                    stall=self.loop.now - t0)
+        return res
 
     async def _cond_wait(self, deadline: float) -> None:
         await self._cond.wait(max(0.0, deadline - self.loop.now) + 1e-9)

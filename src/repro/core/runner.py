@@ -39,6 +39,8 @@ from .params import RaftParams, SimParams
 from .prob import PRNG
 from .raft import Node
 from .simulate import EventLoop
+from ..obs.metrics import Metrics
+from ..obs.trace import Tracer
 
 
 @dataclass
@@ -270,6 +272,13 @@ class RunResult:
     #: cluster-aggregated protocol counters (terms, elections, evictions,
     #: checksum drops) — the gray-failure matrix's metrics
     raft_stats: dict = field(default_factory=dict)
+    #: per-node breakdown of raft_stats (the aggregation above loses
+    #: which node churned — this keeps the attribution)
+    raft_by_node: dict = field(default_factory=dict)
+    #: flight-recorder events (run_workload(trace=True)); None when off
+    trace: Optional[list] = None
+    #: the unified Metrics registry the three dicts above are views of
+    metrics: Optional[object] = None
 
     def summarize(self) -> dict:
         import statistics as st
@@ -293,11 +302,34 @@ class RunResult:
         }
 
 
+def _attach_warm_tracer(cluster: Cluster) -> Tracer:
+    """Attach a tracer to a warm-restored cluster and seed it with the
+    state the boot phase already established (which the tracer missed):
+    the restored leader's role and, for lease-carrying policies, the
+    serving window its election no-op opened. Uses only values already
+    computed — zero PRNG draws."""
+    tr = Tracer(cluster.loop)
+    leader = cluster.leader()
+    if leader is not None and leader.is_leader():
+        ctx = tr.emit("role", node=leader.id, term=leader.term,
+                      parent=None, role="leader", reason="warm_start")
+        leader._trace_ctx = ctx
+        pol = leader.policy
+        if hasattr(pol, "last_prior_term_index"):
+            e = leader.log[leader.commit_index]
+            tr.emit("lease", node=leader.id, term=leader.term, parent=ctx,
+                    op="acquire", entry_term=e.term,
+                    until=e.interval.latest + leader.p.delta,
+                    limbo=len(getattr(pol, "limbo_keys", ())))
+    return tr
+
+
 def run_workload(raft: RaftParams, sim: SimParams,
                  fault_script: Optional[Callable[[Cluster], None]] = None,
                  check: bool = True,
                  settle_time: float = 1.0,
-                 warm_start: bool = False) -> RunResult:
+                 warm_start: bool = False,
+                 trace: bool = False) -> RunResult:
     """End-to-end deterministic run.
 
     ``fault_script(cluster)`` may schedule crashes/partitions on the loop
@@ -307,11 +339,21 @@ def run_workload(raft: RaftParams, sim: SimParams,
     restoring a cached post-election snapshot (see module docstring);
     histories differ from the cold run of the same seed but remain fully
     deterministic per (params, seed).
+
+    ``trace=True`` attaches the flight recorder (repro.obs): the returned
+    result carries the full event list in ``.trace``. Tracing draws
+    nothing from any PRNG, so the run's history is bit-identical with it
+    on or off.
     """
     if warm_start:
         cluster = warm_cluster(raft, sim)
+        if trace:
+            _attach_warm_tracer(cluster)
     else:
         cluster = build_cluster(raft, sim)
+        if trace:
+            # before the boot election, so the trace captures it
+            Tracer(cluster.loop)
         cluster.wait_for_leader()
     loop = cluster.loop
     t0 = loop.now
@@ -323,22 +365,15 @@ def run_workload(raft: RaftParams, sim: SimParams,
     loop.run_until(t0 + sim.sim_duration + settle_time)
     history = workload.finalize()
 
-    ns = list(cluster.nodes.values())
+    metrics = Metrics.from_cluster(cluster)
     res = RunResult(history=history, t_start=t0, t_end=loop.now,
-                    loop_stats=loop.stats(),
-                    net_stats={"messages_sent": cluster.net.messages_sent,
-                               "messages_delivered": cluster.net.messages_delivered,
-                               "messages_dropped": cluster.net.messages_dropped,
-                               "bytes_sent": cluster.net.bytes_sent},
-                    raft_stats={
-                        "max_term": max(n.term for n in ns),
-                        "elections_started": sum(n.elections_started for n in ns),
-                        "prevote_rounds": sum(n.prevote_rounds for n in ns),
-                        "leader_evictions": sum(n.leader_evictions for n in ns),
-                        "healthy_evictions": sum(n.healthy_evictions for n in ns),
-                        "quorum_step_downs": sum(n.quorum_step_downs for n in ns),
-                        "checksum_drops": sum(n.checksum_drops for n in ns),
-                    })
+                    loop_stats=metrics.loop_stats(),
+                    net_stats=metrics.net_stats(),
+                    raft_stats=metrics.raft_stats(),
+                    raft_by_node=metrics.raft_stats_by_node(),
+                    trace=(loop.tracer.events
+                           if loop.tracer is not None else None),
+                    metrics=metrics)
     for op in history:
         lat = op.end_ts - op.start_ts
         if op.op_type == "Read":

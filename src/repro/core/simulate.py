@@ -62,7 +62,7 @@ class EventLoop:
 
     __slots__ = ("_heap", "_seq", "now", "_stopped",
                  "events_popped", "timers_scheduled", "timers_reaped",
-                 "peak_heap")
+                 "peak_heap", "tracer")
 
     def __init__(self) -> None:
         self._heap: list[tuple[float, int, Any]] = []
@@ -74,6 +74,12 @@ class EventLoop:
         self.timers_scheduled = 0  # cancelable timers created
         self.timers_reaped = 0     # cancelled entries skipped at pop
         self.peak_heap = 0         # high-water mark of pending entries
+        # flight recorder (repro.obs.trace.Tracer) or None. Default-off:
+        # instrumentation sites across the stack guard on
+        # ``loop.tracer is not None`` and make zero PRNG draws, so
+        # untraced runs replay bit-identically and traced runs are
+        # draw-order-neutral.
+        self.tracer = None
 
     # -- scheduling ------------------------------------------------------
     def call_at(self, when: float, fn: Callable[[], None]) -> None:

@@ -46,6 +46,16 @@ class FaultContext:
 
     def note(self, event: str) -> None:
         self.trace.append((self.loop.now, event))
+        tr = self.loop.tracer
+        if tr is not None:
+            # the scheduler's "start <name>" / "stop <name>" notes become
+            # structured fault windows in the trace
+            if event.startswith("start "):
+                tr.emit("fault", op="start", label=event[6:])
+            elif event.startswith("stop "):
+                tr.emit("fault", op="stop", label=event[5:])
+            else:
+                tr.emit("fault", op="note", label=event)
 
     # -- victim selection (deterministic given cluster state) --------------
     def ids(self) -> list[int]:

@@ -90,6 +90,9 @@ class Fleet:
 
     def note(self, event: str) -> None:
         self.trace.append((self.loop.now, event))
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("fleet", op="note", label=event)
 
     # -- traces ------------------------------------------------------------
     def record_restore(self, wid: str, kind: str, t_start: float,
@@ -98,11 +101,18 @@ class Fleet:
         self.restores.append({"wid": wid, "kind": kind, "t_start": t_start,
                               "t_end": t_end, "manifest": manifest,
                               "gen": gen})
+        tr = self.loop.tracer
+        if tr is not None:
+            step = manifest["step"] if manifest else -1
+            tr.emit("fleet", op="restore", wid=wid, kind=kind, step=step)
 
     def record_commit(self, t: float, step: int, ok: bool) -> None:
         self.commit_log.append((t, step, ok))
         if ok and step > self.last_ok_commit_step:
             self.last_ok_commit_step = step
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("fleet", op="manifest", step=step, ok=ok)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
@@ -157,6 +167,7 @@ class FleetResult:
     straggler_flags: dict = field(default_factory=dict)
     restores_detail: list = field(default_factory=list)
     trace: list = field(default_factory=list)
+    events: list = field(default_factory=list)  # flight-recorder events
 
     def summarize(self) -> dict:
         return {
@@ -191,9 +202,14 @@ _LEADER_DEATH_MARKS = ("start crash_restart[leader", "nemesis strikes leader")
 
 def run_fleet(raft: RaftParams, sim: SimParams,
               fleet_params: Optional[FleetParams] = None,
-              scenario: Optional[Scenario] = None) -> FleetResult:
+              scenario: Optional[Scenario] = None,
+              trace: bool = False) -> FleetResult:
     fp = fleet_params or FleetParams()
     cluster = build_cluster(raft, sim)
+    if trace:
+        # attach before the boot election so the trace starts at the root
+        from ..obs import Tracer
+        Tracer(cluster.loop)
     cluster.wait_for_leader()
     fleet = Fleet(cluster, fp)
     ctx = None
@@ -272,4 +288,6 @@ def run_fleet(raft: RaftParams, sim: SimParams,
         straggler_flags=straggler_flags_from(reports),
         restores_detail=fleet.restores,
         trace=(ctx.trace if ctx is not None else []) + fleet.trace,
+        events=(cluster.loop.tracer.events
+                if cluster.loop.tracer is not None else []),
     )

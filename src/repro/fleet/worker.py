@@ -206,6 +206,9 @@ class Worker:
         if self.is_chief and (claim is None or claim["chief"] != self.wid
                               or claim["epoch"] != self.epoch):
             self.is_chief = False           # deposed by a newer claim
+            tr = self.loop.tracer
+            if tr is not None:
+                tr.emit("fleet", op="deposed", wid=self.wid)
             self.fleet.note(f"chief {self.wid} deposed")
         if claim is not None and claim["chief"] == self.wid:
             if not self.is_chief:
@@ -254,6 +257,9 @@ class Worker:
         self._last_committed_step = step
         self.epoch = epoch
         self.is_chief = True
+        tr = self.loop.tracer
+        if tr is not None:
+            tr.emit("fleet", op="claim", wid=self.wid, epoch=epoch)
         self.fleet.note(f"chief {self.wid} claims epoch {epoch}")
 
     async def _commit(self, gen: int) -> None:

@@ -1,0 +1,38 @@
+"""Flight recorder: causal event tracing, unified metrics, forensics.
+
+The observability layer has four pieces:
+
+* :mod:`repro.obs.trace` — the :class:`Tracer`, a typed, schema-versioned
+  event recorder attached to the :class:`~repro.core.simulate.EventLoop`.
+  Default-off: every instrumentation site in the simulator guards on
+  ``loop.tracer is not None`` and makes ZERO PRNG draws, so untraced runs
+  replay bit-identically and traced runs are draw-order-neutral.
+* :mod:`repro.obs.metrics` — the :class:`Metrics` registry (counters,
+  gauges, sim-time histograms keyed by node id) that supersedes the
+  ad-hoc ``loop_stats``/``net_stats``/``raft_stats`` dicts behind the
+  same names, plus derived per-run series (leader-uptime timeline,
+  lease-coverage fraction, read-stall histogram, election-to-first-commit
+  and fault-trigger→detection latencies).
+* :mod:`repro.obs.export` / :mod:`repro.obs.schema` — JSONL trace dumps
+  (byte-identical per seed), Chrome ``trace_event`` output for
+  Perfetto / ``chrome://tracing``, and a hand-rolled schema validator.
+* :mod:`repro.obs.explain` — the forensics CLI
+  (``python -m repro.obs.explain <trace.jsonl>``) that reconstructs "why
+  did this read stall/fail" from the causal parent chain, plus the
+  compact digest embedded in flagged matrix-artifact rows.
+* :mod:`repro.obs.probes` — offline invariant passes over traces, e.g.
+  :func:`~repro.obs.probes.at_most_one_lease_holder`, an independent
+  re-derivation of LeaseGuard's safety argument beside the
+  linearizability checker.
+"""
+
+from .metrics import Metrics, derive_headline_series
+from .probes import at_most_one_lease_holder
+from .schema import SCHEMA_VERSION, validate_events, validate_jsonl
+from .trace import Tracer
+
+__all__ = [
+    "Tracer", "Metrics", "derive_headline_series",
+    "at_most_one_lease_holder", "SCHEMA_VERSION",
+    "validate_events", "validate_jsonl",
+]

@@ -1,0 +1,259 @@
+"""Flight recorder (repro.obs): determinism, draw-order neutrality,
+schema validity, the lease-safety probe, per-node metrics, and the
+forensics pipeline (digest + explain CLI)."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.consistency import resolve_read_mode
+from repro.core import RaftParams, SimParams, build_cluster, run_workload
+from repro.core.runner import clear_warm_cache
+from repro.faults import build_scenario
+from repro.obs import (Metrics, Tracer, at_most_one_lease_holder,
+                       derive_headline_series, validate_events,
+                       validate_jsonl)
+from repro.obs.explain import main as explain_main
+from repro.obs.explain import trace_digest
+from repro.obs.export import read_jsonl, to_chrome_trace, write_jsonl
+from repro.obs.metrics import _RAFT_COUNTERS
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warm_cache():
+    clear_warm_cache()
+    yield
+    clear_warm_cache()
+
+
+def raftp(policy: str = "leaseguard", **kw) -> RaftParams:
+    return RaftParams(read_mode=resolve_read_mode(policy),
+                      election_timeout=0.3, election_jitter=0.1,
+                      heartbeat_interval=0.03, lease_duration=0.6,
+                      rpc_timeout=0.15, **kw)
+
+
+def simp(seed: int, duration: float = 0.8) -> SimParams:
+    return SimParams(seed=seed, sim_duration=duration, interarrival=3e-3,
+                     write_fraction=1 / 3)
+
+
+def fingerprint(res) -> list:
+    return [(o.op_type, o.start_ts, o.end_ts, o.key, repr(o.value),
+             o.success) for o in res.history]
+
+
+def crash_run(policy: str, seed: int, trace: bool, warm: bool = False):
+    sc = build_scenario("leader_crash_restart")
+    return run_workload(raftp(policy, **sc.raft_overrides), simp(seed),
+                        fault_script=sc.install, check=False,
+                        settle_time=1.0, warm_start=warm, trace=trace)
+
+
+# ------------------------------------------------------------- neutrality
+def test_tracing_is_draw_order_neutral():
+    """ON vs OFF: bit-identical histories AND loop/net/raft counters,
+    cold and warm, under a leader crash."""
+    off = crash_run("leaseguard", seed=3, trace=False)
+    on = crash_run("leaseguard", seed=3, trace=True)
+    assert fingerprint(off) == fingerprint(on)
+    assert off.loop_stats == on.loop_stats
+    assert off.net_stats == on.net_stats
+    assert off.raft_stats == on.raft_stats
+    assert off.trace is None and len(on.trace) > 100
+
+    clear_warm_cache()
+    w_off = crash_run("leaseguard", seed=3, trace=False, warm=True)
+    clear_warm_cache()
+    w_on = crash_run("leaseguard", seed=3, trace=True, warm=True)
+    assert fingerprint(w_off) == fingerprint(w_on)
+    assert w_off.loop_stats == w_on.loop_stats
+
+
+def test_tracing_draws_nothing_from_any_prng():
+    """Drive two identical clusters — one traced — and compare the
+    internal state of every PRNG stream afterwards: the tracer must not
+    have consumed a single draw anywhere."""
+    def settled(trace: bool):
+        cluster = build_cluster(raftp(), simp(5))
+        if trace:
+            Tracer(cluster.loop)
+        cluster.wait_for_leader()
+        cluster.loop.run_until(cluster.loop.now + 1.0)
+        return cluster
+
+    a, b = settled(False), settled(True)
+    assert a.prng._r.getstate() == b.prng._r.getstate()
+    assert a.net.prng._r.getstate() == b.net.prng._r.getstate()
+    for nid in a.nodes:
+        assert (a.nodes[nid].prng._r.getstate()
+                == b.nodes[nid].prng._r.getstate())
+        assert (a.nodes[nid].clock.prng._r.getstate()
+                == b.nodes[nid].clock.prng._r.getstate())
+    assert len(b.loop.tracer.events) > 0
+
+
+# ------------------------------------------------------------ determinism
+def test_jsonl_byte_identical_across_runs(tmp_path):
+    paths = []
+    for i in range(2):
+        res = crash_run("leaseguard", seed=7, trace=True)
+        p = tmp_path / f"run{i}.jsonl"
+        write_jsonl(res.trace, p, seed=7, scenario="leader_crash_restart")
+        paths.append(p)
+    assert paths[0].read_bytes() == paths[1].read_bytes()
+    assert validate_jsonl(paths[0]) == []
+
+
+# ----------------------------------------------------------------- schema
+def test_traced_run_validates_and_exports_chrome():
+    res = crash_run("leaseguard", seed=2, trace=True)
+    assert validate_events(res.trace) == []
+    types = {e["type"] for e in res.trace}
+    # a crash-and-reelect run exercises the core taxonomy
+    for t in ("role", "election", "vote", "commit", "lease", "read",
+              "write", "fault"):
+        assert t in types, f"missing event type {t}"
+    chrome = to_chrome_trace(res.trace, t_end=res.t_end)
+    json.dumps(chrome)                      # serializable
+    evs = chrome["traceEvents"]
+    assert any(e["ph"] == "M" for e in evs)
+    assert any(e["ph"] == "X" and e["name"].startswith("leader") for e in evs)
+    assert any(e["ph"] == "X" and "lease" in e["name"] for e in evs)
+
+
+def test_causal_parents_reach_the_election():
+    """A post-crash read on the deposed node must causally chain to a
+    role event (its context), and the trace orders ids/parents sanely."""
+    res = crash_run("leaseguard", seed=2, trace=True)
+    by_id = {e["id"]: e for e in res.trace}
+    fails = [e for e in res.trace
+             if e["type"] == "read" and e["op"] == "fail"]
+    assert fails, "crash run produced no failed reads to explain"
+    for f in fails:
+        start = by_id[f["parent"]]
+        assert start["type"] == "read" and start["op"] == "start"
+        if start["parent"] is not None:
+            assert by_id[start["parent"]]["type"] == "role"
+
+
+# ------------------------------------------------------------------ probe
+def test_lease_probe_passes_on_consistent_crash_runs():
+    for seed in (0, 1, 2):
+        res = crash_run("leaseguard", seed=seed, trace=True)
+        assert at_most_one_lease_holder(res.trace) == []
+
+
+def test_lease_probe_catches_synthetic_overlap():
+    def lease(i, t, node, term, entry_term, until):
+        return {"id": i, "t": t, "type": "lease", "node": node,
+                "term": term, "parent": None, "op": "acquire",
+                "entry_term": entry_term, "until": until, "limbo": 0}
+
+    # node 1 opens an own-term window at t=1.0 while node 0's own-term
+    # window is valid until t=1.5 -> exclusive overlap
+    overlap = [lease(1, 0.5, 0, 1, 1, 1.5), lease(2, 1.0, 1, 2, 2, 2.0)]
+    v = at_most_one_lease_holder(overlap)
+    assert len(v) == 1 and v[0]["check"] == "exclusive_window_overlap"
+
+    # same windows but the second is INHERITED (entry_term < term): safe
+    inherited = [lease(1, 0.5, 0, 1, 1, 1.5), lease(2, 1.0, 1, 2, 1, 2.0)]
+    assert at_most_one_lease_holder(inherited) == []
+
+    # relinquish before the successor opens: planned handover, safe
+    handover = [lease(1, 0.5, 0, 1, 1, 1.5),
+                {"id": 2, "t": 0.8, "type": "lease", "node": 0, "term": 1,
+                 "parent": None, "op": "relinquish"},
+                lease(3, 1.0, 1, 2, 2, 2.0)]
+    assert at_most_one_lease_holder(handover) == []
+
+    # two nodes emitting windows at the same term: split brain
+    twins = [lease(1, 0.5, 0, 3, 3, 1.5), lease(2, 0.6, 1, 3, 3, 1.6)]
+    checks = {x["check"] for x in at_most_one_lease_holder(twins)}
+    assert "one_leader_per_term" in checks
+
+
+# ---------------------------------------------------------------- metrics
+def test_per_node_raft_stats_sum_to_totals():
+    res = crash_run("leaseguard", seed=4, trace=False)
+    assert res.raft_by_node, "per-node breakdown missing"
+    for name in _RAFT_COUNTERS:
+        assert (sum(row[name] for row in res.raft_by_node.values())
+                == res.raft_stats[name])
+    assert (max(row["term"] for row in res.raft_by_node.values())
+            == res.raft_stats["max_term"])
+    # historical key order is part of the artifact contract
+    assert list(res.loop_stats) == ["events_popped", "timers_scheduled",
+                                    "timers_reaped", "pending", "peak_heap",
+                                    "now"]
+    assert list(res.raft_stats) == ["max_term", *_RAFT_COUNTERS]
+    assert isinstance(res.metrics, Metrics)
+
+
+def test_headline_series_are_sane():
+    res = crash_run("leaseguard", seed=2, trace=True)
+    s = derive_headline_series(res.trace, res.t_start, res.t_end)
+    assert 0.0 < s["leader_uptime_fraction"] <= 1.0
+    assert 0.0 < s["lease_coverage"] <= 1.0
+    assert s["read_stalls"]["count"] > 0
+    assert len(s["leader_timeline"]) >= 2       # crash forces a re-election
+    assert any(d["lag"] is not None for d in s["fault_detection"])
+
+
+# -------------------------------------------------------------- forensics
+def test_digest_and_explain_cli(tmp_path, capsys):
+    res = crash_run("leaseguard", seed=0, trace=True)
+    d = trace_digest(res.trace, res.t_start, res.t_end)
+    assert d["n_elections"] >= 2 and d["faults"]
+    assert d["lease_probe_violations"] == 0
+    json.dumps(d)
+
+    p = tmp_path / "t.jsonl"
+    write_jsonl(res.trace, p, seed=0)
+    rc = explain_main([str(p), "--validate", "--probe"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "schema: OK" in out and "lease probe: OK" in out
+    head, events = read_jsonl(p)
+    assert head["seed"] == 0 and len(events) == len(res.trace)
+
+
+def test_fault_matrix_cell_embeds_digest_on_violation():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    from fault_matrix import run_cell
+
+    row = run_cell("inconsistent", "majority_minority", 1)
+    assert row["violation"], "expected the known flagged cell to flag"
+    d = row["trace_digest"]
+    assert d["stale_suspects"] > 0
+    assert any("election won by node" in c for c in d["causes"])
+
+    traced = run_cell("leaseguard", "leader_crash_restart", 0, trace=True)
+    assert traced["lease_probe_violations"] == 0
+    assert traced["trace_events"] > 100
+    # traced rows carry the exact same history-derived fields
+    untraced = run_cell("leaseguard", "leader_crash_restart", 0)
+    for k in ("ops_ok", "ops_fail", "availability", "checked_ops",
+              "violation", "timeline"):
+        assert traced[k] == untraced[k]
+
+
+# ------------------------------------------------------------------ fleet
+def test_fleet_tracing_is_neutral_and_structured():
+    from repro.fleet import (FleetParams, build_fleet_scenario, run_fleet)
+
+    def go(trace: bool):
+        return run_fleet(raftp(), SimParams(seed=1),
+                         FleetParams(duration=2.0),
+                         build_fleet_scenario("chief_kill"), trace=trace)
+
+    off, on = go(False), go(True)
+    assert off.summarize() == on.summarize()
+    assert off.events == [] and validate_events(on.events) == []
+    ops = {e["op"] for e in on.events if e["type"] == "fleet"}
+    assert {"claim", "manifest", "restore"} <= ops
